@@ -1,0 +1,78 @@
+"""§Perf hillclimb driver: run dry-run variants of the three selected
+(arch x shape) pairs and log hypothesis -> change -> before/after.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair nemotron-4-15b:train_4k \
+      --variant baseline --variant od2 ...
+
+Variants (each an explicit, named change against the pair's baseline):
+  paper1d      Megatron 1D point on the mandated mesh (paper baseline)
+  tensor4d     comm-model-optimal factors (the paper's technique)
+  od2          + overdecomposition=2 (paper §4.2)
+  dots         + remat policy "dots" (save matmul outputs; beyond-paper)
+  cacheag      + cached weight gather (1 AG_z instead of 2; beyond-paper)
+  factors=a,b,c,d   explicit decomposition override
+Results append runs/perf/hillclimb.jsonl.
+"""
+import argparse
+import json
+import os
+
+
+def run_variant(arch, shape, variant, out):
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.launch import dryrun as DR
+    kw = dict(probe=True)
+    mesh = "tensor4d"
+    if variant == "paper1d":
+        mesh = "baseline-1d"
+    elif variant == "tensor4d":
+        pass
+    elif variant == "od2":
+        kw["overdecompose"] = 2
+    elif variant == "dots":
+        kw["remat_policy"] = "dots"
+    elif variant == "cacheag":
+        kw["cache_gather"] = True
+    elif variant == "od2+dots":
+        kw["overdecompose"] = 2
+        kw["remat_policy"] = "dots"
+    elif variant == "dots+cacheag":
+        kw["remat_policy"] = "dots"
+        kw["cache_gather"] = True
+    elif variant.startswith("factors="):
+        kw["factors"] = tuple(int(v) for v in
+                              variant.split("=")[1].split(","))
+    else:
+        raise ValueError(variant)
+    rec, _ = DR.lower_one(arch, shape, mesh, **kw)
+    rec["variant"] = variant
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    r = rec["roofline"]
+    print(f"{arch} {shape} {variant}: ct={r['compute_t']:.3f} "
+          f"mt={r['memory_t']:.3f} lt={r['collective_t']:.3f} "
+          f"dom={r['dominant']} useful={r['useful_ratio']:.2f} "
+          f"mem={rec['memory'].get('total_per_device_bytes', 0)/1e9:.1f}GB",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", required=True)
+    ap.add_argument("--out", default="runs/perf/hillclimb.jsonl")
+    args = ap.parse_args()
+    arch, shape = args.pair.split(":")
+    for v in args.variant:
+        try:
+            run_variant(arch, shape, v, args.out)
+        except Exception as e:
+            print(f"{arch} {shape} {v}: FAILED {type(e).__name__}: {e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

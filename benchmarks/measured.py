@@ -1,0 +1,150 @@
+"""Measured (wall-clock) benchmarks on the host CPU mesh.
+
+These run real jitted steps on 8 host devices — small models, honest
+timings. They mirror the paper's *measured* panels at laptop scale:
+fig5_measured sweeps decompositions of the same model (the optimum should
+track the comm model's prediction directionally), fig6_validation trains
+the same model/data under two decompositions and checks the loss curves
+coincide, and kernel_micro times the Pallas kernels (interpret mode)
+against their jnp oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _train_setup(arch, mesh_shape, *, steps, B, S, overdecompose=1,
+                 seed=0):
+    from repro.configs import get_config
+    from repro.core.partition import spec_tree_to_pspecs
+    from repro.launch import mesh as LM
+    from repro.launch import steps as ST
+    from repro.optim.adamw import AdamWConfig, init_state
+
+    mesh = LM.make_smoke_mesh(mesh_shape, ("data", "x", "y", "z"))
+    axes = LM.bind_4d(mesh)
+    cfg = get_config(arch).reduced()
+    params, specs = ST.init_model(cfg, axes, jax.random.PRNGKey(seed),
+                                  dtype=jnp.float32)
+    params = ST.device_put_tree(mesh, params, spec_tree_to_pspecs(specs))
+    state = init_state(params)
+    fn, _, _ = ST.make_train_step(
+        cfg, mesh, axes, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                     total_steps=steps),
+        ST.TrainOptions(overdecompose=overdecompose, dtype=jnp.float32))
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    return cfg, fn, params, state, batch
+
+
+def fig5_measured(steps: int = 6) -> List[Tuple[str, float, str]]:
+    """Iteration time for the same model under different decompositions of
+    8 devices (the paper's Fig. 5 methodology at CPU scale)."""
+    rows = []
+    results = {}
+    for name, shape in [("gdata4_gy2", (4, 1, 2, 1)),
+                        ("gdata2_gx2_gy2", (2, 2, 2, 1)),
+                        ("gdata2_gy4", (2, 1, 4, 1)),
+                        ("gdata2_gy2_gz2", (2, 1, 2, 2)),
+                        ("gdata1_gy4_gz2", (1, 1, 4, 2))]:
+        cfg, fn, params, state, batch = _train_setup(
+            "stablelm-1.6b", shape, steps=steps, B=8, S=64)
+        params, state, m = fn(params, state, batch)  # compile+warmup
+        t0 = time.time()
+        for _ in range(steps):
+            params, state, m = fn(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / steps * 1e6
+        results[name] = us
+        rows.append((f"fig5_measured/{name}", us,
+                     f"loss={float(m['loss']):.3f}"))
+    best = min(results, key=results.get)
+    rows.append(("fig5_measured/best", results[best], f"config={best}"))
+    return rows
+
+
+def fig6_validation(steps: int = 40) -> List[Tuple[str, float, str]]:
+    """Paper Fig. 6: parallelization must not change statistical
+    efficiency — identical data under the 4D mesh vs the Megatron point
+    must give (numerically) the same loss curve."""
+    curves = {}
+    for name, shape in [("tensor4d", (2, 2, 2, 1)),
+                        ("megatron1d", (2, 1, 4, 1))]:
+        cfg, fn, params, state, batch = _train_setup(
+            "qwen3-1.7b", shape, steps=steps, B=8, S=64)
+        losses = []
+        for _ in range(steps):
+            params, state, m = fn(params, state, batch)
+            losses.append(float(m["loss"]))
+        curves[name] = losses
+    gap = max(abs(a - b) for a, b in zip(curves["tensor4d"],
+                                         curves["megatron1d"]))
+    assert gap < 2e-3, f"loss curves diverged: {gap}"
+    return [("fig6/final_loss_tensor4d", curves["tensor4d"][-1],
+             f"first={curves['tensor4d'][0]:.4f}"),
+            ("fig6/final_loss_megatron", curves["megatron1d"][-1],
+             f"max_curve_gap={gap:.2e}")]
+
+
+def overdecomposition_overlap(steps: int = 6) -> List[Tuple[str, float, str]]:
+    """Paper §4.2: overdecomposition must not change results; on real TPUs
+    it overlaps comm/compute (we verify equivalence + report timing)."""
+    rows = []
+    for od in (1, 2):
+        cfg, fn, params, state, batch = _train_setup(
+            "stablelm-1.6b", (2, 2, 2, 1), steps=steps, B=8, S=64,
+            overdecompose=od)
+        params, state, m = fn(params, state, batch)
+        t0 = time.time()
+        for _ in range(steps):
+            params, state, m = fn(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / steps * 1e6
+        rows.append((f"overdecomp/od{od}", us,
+                     f"loss={float(m['loss']):.4f}"))
+    return rows
+
+
+def kernel_micro() -> List[Tuple[str, float, str]]:
+    """Pallas kernels (interpret mode — correctness execution on CPU, the
+    BlockSpec tiling is the TPU artifact) vs their jnp oracles."""
+    from repro.kernels import ops, ref
+    rows = []
+
+    def time_fn(fn, *args, reps=3):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / reps * 1e6
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    rows.append(("kernel/block_matmul_interp",
+                 time_fn(lambda x, y: ops.matmul(x, y, bm=128, bn=128,
+                                                 bk=128), a, b),
+                 "256x256x256"))
+    rows.append(("kernel/matmul_xla", time_fn(
+        jax.jit(ref.block_matmul_ref), a, b), "256x256x256"))
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 64))
+    rows.append(("kernel/flash_attn_interp",
+                 time_fn(lambda *t: ops.flash_attention(*t, bq=128, bk=128),
+                         q, k, v), "T=S=256 h=4/2"))
+    rows.append(("kernel/attn_ref_xla", time_fn(
+        jax.jit(ref.flash_attention_ref), q, k, v), "T=S=256"))
+    return rows

@@ -1,0 +1,164 @@
+"""Analytic reproductions of the paper's tables/figures from the
+communication model (the quantities the paper profiles are collective
+*volumes*, which the model predicts exactly; wall-clock panels are
+hardware-bound and are covered by the measured sweep in fig5_measured)."""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+from repro.core import comm_model as CM
+
+GB = 1 << 30
+
+
+def fig5_sweep() -> List[Tuple[str, float, str]]:
+    """Paper Fig. 5: GPT-9B on 16 GPUs, iteration-volume for each
+    (G_data, G_c) config; the model must place the optimum at
+    G_data=2, G_c≈4.89 -> 4."""
+    H, L = 6144, 24              # ~9B-ish GPT
+    tokens = 64 * 2048           # paper: batch 64, seq 2048
+    layers = CM.transformer_layers(H, n_layers=L)
+    rows = []
+    best = (None, float("inf"))
+    for g_data in (1, 2):
+        gt = 16 // g_data
+        for gy in (1, 2, 4, 8, 16):
+            if gt % gy:
+                continue
+            d = CM.Decomposition(g_data, gt // gy, gy, 1)
+            v = CM.model_volume(layers, tokens, d) * 2 / GB  # bf16 GB
+            rows.append((f"fig5/gdata{g_data}_gc{gy}", v,
+                         f"volume_GB={v:.1f}"))
+            if v < best[1]:
+                best = (d, v)
+    pred = CM.paper_optimal_gc(16 // 2)
+    rows.append((f"fig5/optimum", best[1],
+                 f"best={best[0]} paper_pred_gc={pred:.2f}"))
+    assert best[0].g_data == 2 and best[0].g_y in (2, 4), best
+    return rows
+
+
+def fig8_weak_scaling() -> List[Tuple[str, float, str]]:
+    """Paper Fig. 8 (right): GPT weak scaling 32->256 GPUs; Tensor4D's
+    per-GPU volume flattens (Eq. 12) while Megatron grows ~sqrt(G)
+    (Eq. 13)."""
+    ladder = [  # (name, hidden, layers, g_tensor, gpus) — paper Table 3
+        ("gpt5b", 4096, 24, 4, 32),
+        ("gpt10b", 5760, 24, 8, 64),
+        ("gpt20b", 8192, 24, 16, 128),
+        ("gpt40b", 11520, 24, 32, 256),
+    ]
+    tokens = 1024 * 2048
+    rows = []
+    for name, H, L, gt, g in ladder:
+        layers = CM.transformer_layers(H, n_layers=L)
+        # the paper's algorithm (2D tensor grid, z=1) — Eq. 12 regime
+        t3d = CM.optimize_decomposition(
+            layers, tokens, g, CM.Constraints(min_tensor=gt, max_y=64,
+                                              z_divides=(1,)),
+            top_k=1)[0]
+        # the 4D generalization (z free): weight AG/RS traffic grows with
+        # params in weak scaling, so z helps less here than in Fig. 5
+        t4d = CM.optimize_decomposition(
+            layers, tokens, g, CM.Constraints(min_tensor=gt, max_y=64),
+            top_k=1)[0]
+        mega = CM.model_volume(layers, tokens,
+                               CM.megatron_decomposition(g, gt))
+        o3 = t3d[1] * 2 / GB
+        o4 = t4d[1] * 2 / GB
+        mg = mega * 2 / GB
+        rows.append((f"fig8/{name}_tensor3d", o3, f"{t3d[0]} GB={o3:.1f}"))
+        rows.append((f"fig8/{name}_tensor4d", o4, f"{t4d[0]} GB={o4:.1f}"))
+        rows.append((f"fig8/{name}_megatron", mg,
+                     f"GB={mg:.1f} reduction_vs_3d="
+                     f"{100 * (1 - o3 / mg):.0f}%"))
+    # Eq. 12/13 asymptotics: paper curves — 3d roughly flat, megatron ~sqrt(G)
+    o = [r[1] for r in rows if r[0].endswith("tensor3d")]
+    m = [r[1] for r in rows if r[0].endswith("megatron")]
+    assert m[-1] / m[0] > 1.5, "megatron volume should grow with G"
+    assert o[-1] / o[0] < m[-1] / m[0], "tensor3d should grow slower"
+    return rows
+
+
+def unet_comm_layers(channels: int, levels: int = 4,
+                     res_blocks: int = 3) -> List[CM.LayerShape]:
+    """Eq. 8's layer list for the paper's U-Net: per level, res blocks of
+    a normal (cin->cout) + transposed (cout->cout) conv pair; tokens per
+    level shrink 4x with each downsample (tokens_scale)."""
+    out = []
+    cin = channels
+    for lv in range(levels):
+        cout = channels * (2 ** lv)
+        scale = 0.25 ** lv
+        for b in range(res_blocks):
+            out.append(CM.LayerShape(cin, cout, tokens_scale=scale))
+            out.append(CM.LayerShape(cout, cout, transposed=True,
+                                     tokens_scale=scale))
+            cin = cout
+    return out
+
+
+def fig7_unet_weak_scaling() -> List[Tuple[str, float, str]]:
+    """Paper Fig. 7 (right): U-Net weak scaling 32->256 GPUs (Table 2
+    ladder: channels x sqrt(2) per doubling), per-GPU comm volume,
+    Tensor3D vs Megatron. The paper measures 53-80% reductions."""
+    ladder = [("unet3.5b", 2048, 4, 32), ("unet7.5b", 3072, 8, 64),
+              ("unet14b", 4096, 16, 128), ("unet28b", 5760, 32, 256)]
+    tokens = 2048 * 16 * 16   # batch 2048 images x (128/8)^2 latent pixels
+    rows = []
+    for name, ch, gt, g in ladder:
+        layers = unet_comm_layers(ch)
+        t3d = CM.optimize_decomposition(
+            layers, tokens, g, CM.Constraints(min_tensor=gt, max_y=64,
+                                              z_divides=(1,)), top_k=1)[0]
+        mega = CM.model_volume(layers, tokens,
+                               CM.megatron_decomposition(g, gt))
+        o3 = t3d[1] * 2 / GB
+        mg = mega * 2 / GB
+        rows.append((f"fig7/{name}_tensor3d", o3, f"{t3d[0]} GB={o3:.1f}"))
+        rows.append((f"fig7/{name}_megatron", mg,
+                     f"GB={mg:.1f} reduction={100 * (1 - o3 / mg):.0f}%"))
+    red_last = 1 - rows[-2][1] / rows[-1][1]
+    assert red_last > 0.4, rows[-2:]  # paper: up to 80% at 256 GPUs
+    return rows
+
+
+def table5_cai3d() -> List[Tuple[str, float, str]]:
+    """Paper Table 5: GPT-10B on 64 GPUs, Tensor4D vs Colossal-AI-3D.
+    CAI-3D uses the symmetric cube (4,4,4) on the tensor group (here the
+    whole 64 since its G_data folds in); we model both."""
+    H, L = 5760, 24
+    tokens = 1024 * 2048
+    layers = CM.transformer_layers(H, n_layers=L)
+    best = CM.optimize_decomposition(
+        layers, tokens, 64, CM.Constraints(min_tensor=8), top_k=1)[0]
+    ours = best[1] * 2 / GB
+    cai = CM.cai3d_decomposition(64, 64)
+    v_cai = CM.model_volume(layers, tokens, cai) * 2 / GB
+    red = 100 * (1 - ours / v_cai)
+    return [
+        ("table5/gpt10b_tensor4d", ours, f"{best[0]} GB={ours:.1f}"),
+        ("table5/gpt10b_cai3d", v_cai,
+         f"{cai} GB={v_cai:.1f} reduction={red:.0f}% (paper: 70%)"),
+    ]
+
+
+def eq11_asymptote() -> List[Tuple[str, float, str]]:
+    """Eq. 12: Tensor4D per-GPU volume tends to a constant in weak
+    scaling; report the fitted alpha0."""
+    tokens = 1024 * 2048
+    vols = []
+    for g, gt in [(32, 4), (64, 8), (128, 16), (256, 32), (512, 64)]:
+        H = int(4096 * math.sqrt(g / 32))
+        H -= H % 64
+        layers = CM.transformer_layers(H, n_layers=24)
+        d = CM.optimize_decomposition(
+            layers, tokens, g, CM.Constraints(min_tensor=gt, max_y=64,
+                                              z_divides=(1,)),
+            top_k=1)[0]
+        vols.append(d[1] * 2 / GB)
+    slope_last = (vols[-1] - vols[-2]) / vols[-2]
+    return [("eq12/alpha0_GB", vols[-1],
+             f"ladder={['%.1f' % v for v in vols]} "
+             f"last_rel_slope={slope_last:.3f}")]

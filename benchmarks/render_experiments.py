@@ -1,0 +1,85 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from
+runs/dryrun/results.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+import json
+import sys
+from collections import defaultdict
+
+ARCH_ORDER = ["internvl2-26b", "h2o-danube-3-4b", "whisper-small",
+              "nemotron-4-15b", "deepseek-v3-671b", "stablelm-1.6b",
+              "deepseek-v2-lite-16b", "jamba-v0.1-52b", "qwen3-1.7b",
+              "xlstm-350m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path="runs/dryrun/results.jsonl"):
+    best = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("multi_pod", False), r.get("overdecompose", 1),
+                   r.get("remat_policy", "full"),
+                   r.get("cache_gather", False))
+            best[key] = r  # later lines win (reruns supersede)
+    return best
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.1f}"
+
+
+def main():
+    recs = load()
+    print("### Roofline table (single-pod, 256 chips, baseline configs)\n")
+    print("| arch | shape | mesh | factors (d,x,y,z) | compute_t (s) | "
+          "memory_t (s) | collective_t (s) | dominant | useful | "
+          "mem GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("baseline-1d", "tensor4d"):
+                r = recs.get((arch, shape, mesh, False, 1, "full", False))
+                if r is None:
+                    continue
+                if "error" in r:
+                    print(f"| {arch} | {shape} | {mesh} | - | ERROR | | | "
+                          f"| | {r['error'][:60]} |")
+                    continue
+                ro = r["roofline"]
+                fa = r["factors"]
+                fs = f"({fa['g_data']},{fa['g_x']},{fa['g_y']},{fa['g_z']})"
+                mem = r.get("memory", {}).get("total_per_device_bytes")
+                print(f"| {arch} | {shape} | {mesh} | {fs} "
+                      f"| {ro['compute_t']:.3f} | {ro['memory_t']:.3f} "
+                      f"| {ro['collective_t']:.3f} | {ro['dominant']} "
+                      f"| {ro['useful_ratio']:.2f} | {fmt_bytes(mem)} |")
+    print()
+    print("### Multi-pod pass (2 x 16 x 16 = 512 chips)\n")
+    print("| arch | shape | mesh | compiled | collective GB/dev |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("baseline-1d", "tensor4d"):
+                r = recs.get((arch, shape, mesh, True, 1, "full", False))
+                if r is None:
+                    continue
+                ok = "error" not in r
+                coll = (r["roofline"]["collective_bytes"] / 1e9
+                        if ok else None)
+                print(f"| {arch} | {shape} | {mesh} | "
+                      f"{'yes' if ok else 'FAILED'} | "
+                      f"{coll:.2f} |" if ok else
+                      f"| {arch} | {shape} | {mesh} | FAILED | - |")
+    print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Benchmark harness — one function per paper table/figure + the roofline
+summary. Prints ``name,us_per_call,derived`` CSV (us_per_call is the
+measured/metric value; ``derived`` carries the figure-specific payload).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig8,...]
+"""
+import argparse
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+
+def roofline_summary():
+    """§Roofline table digest from the dry-run records."""
+    path = "runs/dryrun/results.jsonl"
+    rows = []
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0, "run launch.dryrun first")]
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            if "roofline" not in r or r.get("multi_pod"):
+                continue
+            if r.get("overdecompose", 1) != 1:
+                continue
+            ro = r["roofline"]
+            t = max(ro["compute_t"], ro["memory_t"], ro["collective_t"])
+            rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         t * 1e6,
+                         f"dom={ro['dominant']} "
+                         f"ct={ro['compute_t']:.3f} "
+                         f"mt={ro['memory_t']:.3f} "
+                         f"lt={ro['collective_t']:.3f} "
+                         f"useful={ro['useful_ratio']:.2f}"))
+    return rows or [("roofline/empty", 0.0, "no records")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import measured, paper_tables
+    suites = {
+        "fig5": paper_tables.fig5_sweep,
+        "fig7": paper_tables.fig7_unet_weak_scaling,
+        "fig8": paper_tables.fig8_weak_scaling,
+        "table5": paper_tables.table5_cai3d,
+        "eq12": paper_tables.eq11_asymptote,
+        "fig5_measured": measured.fig5_measured,
+        "fig6": measured.fig6_validation,
+        "overdecomp": measured.overdecomposition_overlap,
+        "kernels": measured.kernel_micro,
+        "roofline": roofline_summary,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            for row in fn():
+                label, val, derived = row
+                print(f"{label},{val:.2f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Communication-model planner (paper §5 as a tool): given an architecture
+and a chip count, rank 4D decompositions by modeled per-chip volume.
+
+  PYTHONPATH=src python examples/comm_planner.py --arch jamba-v0.1-52b \
+      --chips 256 --batch 256 --seq 4096
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import comm_model as CM
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gpt-paper-20b")
+ap.add_argument("--chips", type=int, default=256)
+ap.add_argument("--batch", type=int, default=256)
+ap.add_argument("--seq", type=int, default=4096)
+ap.add_argument("--top", type=int, default=10)
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+cons = cfg.tp_constraints(args.batch)
+tokens = args.batch * args.seq
+ranked = CM.optimize_decomposition(list(cfg.comm_layers()), tokens,
+                                   args.chips, cons, top_k=args.top)
+print(f"{args.arch} on {args.chips} chips, {tokens/1e6:.1f}M tokens/step")
+print(f"{'rank':>4} {'g_data':>6} {'g_x':>4} {'g_y':>4} {'g_z':>4} "
+      f"{'GB/chip':>9} {'vs megatron@same_gt':>19}")
+for i, (d, v) in enumerate(ranked):
+    gb = v * 2 / (1 << 30)
+    mega = CM.megatron_decomposition(args.chips, max(d.g_tensor, 1))
+    v_mega = CM.model_volume(list(cfg.comm_layers()), tokens, mega)
+    print(f"{i:>4} {d.g_data:>6} {d.g_x:>4} {d.g_y:>4} {d.g_z:>4} "
+          f"{gb:>9.1f} {100 * (1 - v / v_mega):>18.0f}%")

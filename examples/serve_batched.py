@@ -1,0 +1,13 @@
+"""Batched serving example (prefill + decode with KV caches)."""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "deepseek-v2-lite-16b", "--batch", "4",
+                     "--prompt-len", "16", "--gen", "8"]
+    main()

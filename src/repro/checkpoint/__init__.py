@@ -1,0 +1,2 @@
+"""npz pytree checkpointing with sharding metadata."""
+from repro.checkpoint.ckpt import restore, save

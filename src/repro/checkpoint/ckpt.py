@@ -1,0 +1,61 @@
+"""Checkpointing: pytree -> .npz with structure + sharding metadata.
+
+No orbax dependency (offline container). Arrays are gathered to host
+(fine for the CPU-scale models this runs on; on a real pod you would swap
+the io layer for per-host shards — the format already records the
+PartitionSpec per leaf so resharding on restore is mechanical).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, params, opt_state=None, *, step: int = 0,
+         pspecs=None, extra: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    meta = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "treedef": str(jax.tree.structure(tree)),
+        "specs": ({k: str(v) for k, v in _flatten(
+            {"params": pspecs}).items()} if pspecs is not None else {}),
+        "extra": extra or {},
+    }
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree template)."""
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    leaves = []
+    for path_, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        key = "params/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
+    return tree, int(meta["step"])

@@ -1,0 +1,47 @@
+"""Architecture config registry: one module per assigned architecture
+(+ the paper's own models). ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.base import ArchConfig
+from repro.configs.shapes import SHAPES, InputShape
+
+_MODULES = {
+    "internvl2-26b": "internvl2_26b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "whisper-small": "whisper_small",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "xlstm-350m": "xlstm_350m",
+    "gpt-paper-20b": "gpt_paper_20b",
+}
+
+ASSIGNED = tuple(k for k in _MODULES if k != "gpt-paper-20b")
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {k: get_config(k) for k in _MODULES}
+
+
+# which architectures run long_500k (sub-quadratic only, see DESIGN.md)
+LONG_CONTEXT_OK = ("h2o-danube-3-4b", "jamba-v0.1-52b", "xlstm-350m")
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §Decode-shape skips)")
+    return None

@@ -1,0 +1,12 @@
+"""H2O-Danube3-4B [arXiv:2401.16818 lineage] — llama+mistral mix with
+sliding-window attention (window 4096), GQA kv=8."""
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b", arch_type="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_ff=10240,
+    vocab_size=32000, head_dim=120,
+    norm="rmsnorm", act="silu", gated_mlp=True,
+    sliding_window=4096, rope_theta=10000.0,
+    source="H2O-Danube [arXiv:2401.16818]",
+)

@@ -1,0 +1,15 @@
+"""InternVL2-26B [arXiv:2404.16821] — InternViT-6B vision encoder (STUB,
+per assignment) + InternLM2-20B language backbone. The config below is the
+transformer backbone; input_specs feeds precomputed ViT patch embeddings
+(dim 3200) through the 2-layer MLP projector."""
+from repro.models.base import ArchConfig, EncoderCfg
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", arch_type="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=92553, head_dim=128,
+    norm="rmsnorm", act="silu", gated_mlp=True,
+    rope_theta=1_000_000.0,
+    encoder=EncoderCfg(n_layers=0, n_ctx=1024, input_dim=3200),
+    source="InternVL2 [arXiv:2404.16821]; InternLM2 backbone",
+)

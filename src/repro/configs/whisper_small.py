@@ -1,0 +1,16 @@
+"""Whisper-small [arXiv:2212.04356] — enc-dec; mel+conv frontend is a STUB
+per assignment (input_specs feeds post-conv frame embeddings (B,1500,768)).
+Absolute positions (sinusoid enc / learned dec), biases, GeLU, LayerNorm,
+tied decoder embedding."""
+from repro.models.base import ArchConfig, EncoderCfg
+
+CONFIG = ArchConfig(
+    name="whisper-small", arch_type="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=51865, head_dim=64,
+    norm="layernorm", act="gelu", gated_mlp=False,
+    attn_bias=True, mlp_bias=True, rotary_pct=0.0,
+    tie_embeddings=True, max_seq=32768,
+    encoder=EncoderCfg(n_layers=12, n_ctx=1500, input_dim=0),
+    source="Whisper [arXiv:2212.04356]",
+)

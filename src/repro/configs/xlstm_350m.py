@@ -1,0 +1,14 @@
+"""xLSTM-350M [arXiv:2405.04517] — 24 blocks, 7:1 mLSTM:sLSTM, 4 heads,
+self-contained blocks (d_ff=0; mLSTM pf=2, sLSTM post-MLP pf=4/3)."""
+from repro.models.base import ArchConfig, XLSTMCfg
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", arch_type="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    norm="layernorm", act="gelu", gated_mlp=False,
+    rotary_pct=0.0,
+    xlstm=XLSTMCfg(proj_factor_mlstm=2.0, proj_factor_slstm=4.0 / 3.0,
+                   conv_kernel=4),
+    source="xLSTM [arXiv:2405.04517]",
+)

@@ -1,0 +1,7 @@
+"""Core of the 4D hybrid tensor+data parallel algorithm (the paper's
+primary contribution): mesh axis conventions, the communication model and
+decomposition optimizer, the tensor-parallel primitives with the paper's
+collective schedule, and the overdecomposition overlap machinery."""
+from repro.core import comm_model, mesh, overdecompose, parallel, partition
+
+__all__ = ["comm_model", "mesh", "overdecompose", "parallel", "partition"]

@@ -1,0 +1,207 @@
+"""Analytic communication model (paper §5, generalized to 4D).
+
+The supplied text models the per-GPU, per-iteration all-reduce volume of its
+2D tensor-parallel algorithm (Eqs. 1-4) and derives decomposition rules
+(max ``G_data``; for transformers ``G_c = sqrt(3 G_tensor)``, Eq. 7). The 4D
+algorithm adds the depth axis ``G_z``; its extra collectives are the weight
+all-gather (forward) and the weight-gradient reduce-scatter (backward) over
+``z``, whose volumes are *batch-independent* — the 4D trade: pay
+``O(params)`` weight traffic to cut ``O(batch)`` activation traffic by
+``1/G_z``.
+
+All volumes are *elements sent+received per device per iteration* (multiply
+by dtype bytes for bytes), mirroring the paper. Collectives are assumed
+bandwidth-optimal (Patarasuk & Yuan): ``V_AR = 2 (p-1)/p * buf``,
+``V_AG = V_RS = (p-1)/p * buf_full``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """One contraction layer: Y[m,n] = X[m,k] @ W[k,n].
+
+    ``transposed`` layers store W with the x/y roles swapped (paper §4.1),
+    which swaps G_x and G_y in the volume formulas (paper Table 1).
+    ``count`` multiplies the layer (e.g. repeated blocks).
+    ``moe_factor`` scales the *weight* terms only (routed experts hold
+    ``E`` times the parameters but each token activates ``top_k``; the
+    activation all-reduces see ``top_k/E``-scaled token counts folded in by
+    the caller via separate LayerShape entries).
+    """
+
+    k: int
+    n: int
+    transposed: bool = False
+    count: int = 1
+    tokens_scale: float = 1.0  # fraction of batch tokens that hit this layer
+
+
+@dataclasses.dataclass(frozen=True)
+class Decomposition:
+    g_data: int
+    g_x: int
+    g_y: int
+    g_z: int
+
+    @property
+    def g(self) -> int:
+        return self.g_data * self.g_x * self.g_y * self.g_z
+
+    @property
+    def g_tensor(self) -> int:
+        return self.g_x * self.g_y * self.g_z
+
+
+def allreduce_volume(p: int, buf: float) -> float:
+    """Lower-bound all-reduce volume per participant (Eq. 1)."""
+    return 0.0 if p <= 1 else 2.0 * (p - 1) / p * buf
+
+
+def gather_or_scatter_volume(p: int, full_buf: float) -> float:
+    """All-gather / reduce-scatter volume per participant."""
+    return 0.0 if p <= 1 else (p - 1) / p * full_buf
+
+
+def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
+                 cached_weight_gather: bool = False,
+                 include_data_parallel: bool = True) -> float:
+    """Per-GPU per-iteration volume (elements) for one layer, fwd+bwd.
+
+    ``tokens`` is the *global* batch in tokens (B*S). Paper Eqs. 2-4 are the
+    ``g_z = 1`` specialization of this function.
+    """
+    gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
+    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
+    # fwd all-reduce of partial outputs over the contraction axis (Eq. 2)
+    v_fp = allreduce_volume(gx, m_local * ls.n / gy)
+    # bwd all-reduce of dX over the output axis (Eq. 3)
+    v_bp = allreduce_volume(gy, m_local * ls.k / gx)
+    # z-axis weight collectives (4D): AG fwd (+AG bwd if not cached) + RS bwd
+    w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
+    n_gathers = 2 if not cached_weight_gather else 1
+    v_z = (n_gathers + 1) * gather_or_scatter_volume(d.g_z, w_full_per_xy)
+    # data-parallel gradient all-reduce (the text measures it as 1e-3 of the
+    # tensor terms but we keep it for completeness)
+    v_dp = 0.0
+    if include_data_parallel:
+        v_dp = allreduce_volume(d.g_data, w_full_per_xy / d.g_z)
+    return ls.count * (v_fp + v_bp + v_z + v_dp)
+
+
+def model_volume(layers: Sequence[LayerShape], tokens: int, d: Decomposition,
+                 **kw) -> float:
+    return sum(layer_volume(ls, tokens, d, **kw) for ls in layers)
+
+
+# ---------------------------------------------------------------------- #
+# Closed forms from the paper (for tests / sanity checks)
+# ---------------------------------------------------------------------- #
+
+def transformer_layers(hidden: int, n_layers: int = 1,
+                       ffn_mult: int = 4) -> List[LayerShape]:
+    """Paper Table 1: the four FC layers of a transformer block."""
+    h = hidden
+    return [
+        LayerShape(h, 3 * h, transposed=False, count=n_layers),
+        LayerShape(h, h, transposed=True, count=n_layers),
+        LayerShape(h, ffn_mult * h, transposed=False, count=n_layers),
+        LayerShape(ffn_mult * h, h, transposed=True, count=n_layers),
+    ]
+
+
+def paper_transformer_volume(tokens: int, hidden: int, g: int,
+                             g_x: int, g_y: int) -> float:
+    """Eq. 6: V = 8*B*H/G * ((G_c - 1) + 3*(G_r - 1)).
+
+    Here paper's (G_r, G_c) == our (g_x, g_y); paper's B is tokens.
+    """
+    return 8.0 * tokens * hidden / g * ((g_y - 1) + 3 * (g_x - 1))
+
+
+def paper_optimal_gc(g_tensor: int) -> float:
+    """Eq. 7: G_c = sqrt(3 * G_tensor)."""
+    return math.sqrt(3.0 * g_tensor)
+
+
+# ---------------------------------------------------------------------- #
+# Decomposition optimizer
+# ---------------------------------------------------------------------- #
+
+def _divisors(n: int) -> List[int]:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    """Divisibility / memory constraints for a real model."""
+
+    global_batch: int = 0          # g_data * g_z must divide it (0 = skip)
+    max_x: int = 0                 # e.g. d_model shard limit (0 = unbounded)
+    max_y: int = 0                 # e.g. num_kv_heads (0 = unbounded)
+    min_tensor: int = 1            # memory floor: params must fit
+    x_divides: Tuple[int, ...] = ()  # dims that g_x must divide
+    y_divides: Tuple[int, ...] = ()
+    z_divides: Tuple[int, ...] = ()
+
+
+def enumerate_decompositions(g: int, c: Constraints = Constraints()
+                             ) -> Iterable[Decomposition]:
+    for g_data in _divisors(g):
+        rem = g // g_data
+        for g_x in _divisors(rem):
+            rem2 = rem // g_x
+            for g_z in _divisors(rem2):
+                g_y = rem2 // g_z
+                d = Decomposition(g_data, g_x, g_y, g_z)
+                if d.g_tensor < c.min_tensor:
+                    continue
+                if c.global_batch and c.global_batch % (g_data * g_z):
+                    continue
+                if c.max_x and g_x > c.max_x:
+                    continue
+                if c.max_y and g_y > c.max_y:
+                    continue
+                if any(dim % g_x for dim in c.x_divides):
+                    continue
+                if any(dim % g_y for dim in c.y_divides):
+                    continue
+                if any(dim % g_z for dim in c.z_divides):
+                    continue
+                yield d
+
+
+def optimize_decomposition(layers: Sequence[LayerShape], tokens: int, g: int,
+                           constraints: Constraints = Constraints(),
+                           top_k: int = 1, **kw
+                           ) -> List[Tuple[Decomposition, float]]:
+    """Exhaustively rank decompositions by modeled volume (paper §5.2 does
+    this analytically for transformers; we do it for arbitrary layer lists,
+    which is what the paper's 'general model' promises)."""
+    scored = [(d, model_volume(layers, tokens, d, **kw))
+              for d in enumerate_decompositions(g, constraints)]
+    if not scored:
+        raise ValueError(f"no feasible decomposition of {g} devices under "
+                         f"{constraints}")
+    scored.sort(key=lambda t: (t[1], t[0].g_tensor))
+    return scored[:top_k]
+
+
+def megatron_decomposition(g: int, g_tensor: int) -> Decomposition:
+    """The text's observation: G_c = G_tensor (1D TP) == Megatron-LM.
+    (G_c is our g_y: column-parallel QKV, row-parallel projections.)"""
+    return Decomposition(g // g_tensor, 1, g_tensor, 1)
+
+
+def cai3d_decomposition(g: int, g_tensor: int) -> Optional[Decomposition]:
+    """Colossal-AI-3D: symmetric cube over the tensor group."""
+    cube = round(g_tensor ** (1 / 3))
+    if cube ** 3 != g_tensor:
+        return None
+    return Decomposition(g // g_tensor, cube, cube, cube)

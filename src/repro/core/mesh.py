@@ -1,0 +1,177 @@
+"""Mesh axis conventions for the 4D hybrid algorithm.
+
+The paper decomposes ``G`` devices as ``G_data x G_x x G_y x G_z``:
+
+  * ``data`` — data parallelism (batch sharding; may include a leading
+    ``pod`` axis on multi-pod meshes, since pods simply extend data
+    parallelism),
+  * ``x``    — tensor-parallel rows: shards the *contraction* (k) dim of a
+    "normal" layer's weight and the feature dim of the residual stream,
+  * ``y``    — tensor-parallel columns: shards the output (n) dim of a
+    normal layer; activations are replicated over ``y``,
+  * ``z``    — depth: co-shards the batch and the weight/optimizer storage
+    (weights all-gathered over ``z`` at use, gradients reduce-scattered).
+
+Setting ``z=None`` (G_z=1) recovers the supplied Tensor3D text verbatim;
+setting additionally ``y=None`` recovers Megatron-LM 1D tensor parallelism.
+
+Everything in :mod:`repro.layers` is written against :class:`MeshAxes`, so
+the same model code runs on the assignment-mandated ``("data","model")``
+production mesh (1D TP baseline) and on the 4D mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+def _names(axis: AxisName) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    if isinstance(axis, str):
+        return (axis,)
+    return tuple(axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical 4D axes bound to physical mesh axis names (or None == size 1)."""
+
+    data: AxisName = ("data",)
+    x: AxisName = "x"
+    y: AxisName = "y"
+    z: AxisName = "z"
+    # static sizes, captured from the physical mesh at bind time
+    sizes: Tuple[Tuple[str, int], ...] = ()
+
+    # ------------------------------------------------------------------ #
+    def size(self, axis: AxisName) -> int:
+        d = dict(self.sizes)
+        return math.prod(d.get(n, 1) for n in _names(axis))
+
+    @property
+    def dp(self) -> int:
+        return self.size(self.data)
+
+    @property
+    def gx(self) -> int:
+        return self.size(self.x)
+
+    @property
+    def gy(self) -> int:
+        return self.size(self.y)
+
+    @property
+    def gz(self) -> int:
+        return self.size(self.z)
+
+    @property
+    def tensor(self) -> int:
+        return self.gx * self.gy * self.gz
+
+    @property
+    def batch_shards(self) -> int:
+        """How many ways the global batch is split (data x z)."""
+        return self.dp * self.gz
+
+    def axis(self, logical: str) -> AxisName:
+        return {"data": self.data, "x": self.x, "y": self.y, "z": self.z}[logical]
+
+    def all_names(self) -> Tuple[str, ...]:
+        out: Tuple[str, ...] = ()
+        for a in (self.data, self.x, self.y, self.z):
+            out += _names(a)
+        return out
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the batch dim is sharded over (data then z)."""
+        return _names(self.data) + _names(self.z)
+
+    def swap_xy(self) -> "MeshAxes":
+        return dataclasses.replace(self, x=self.y, y=self.x)
+
+    # -- PartitionSpec helpers ---------------------------------------- #
+    def pspec(self, *dims: AxisName) -> P:
+        """Build a PartitionSpec from per-dim logical axis names."""
+        out = []
+        for d in dims:
+            n = _names(d)
+            if not n:
+                out.append(None)
+            elif len(n) == 1:
+                out.append(n[0])
+            else:
+                out.append(n)
+        return P(*out)
+
+
+def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
+              y: AxisName = None, z: AxisName = None) -> MeshAxes:
+    """Bind logical 4D axes to a physical mesh, validating names."""
+    sizes = tuple(zip(mesh.axis_names, mesh.devices.shape))
+    known = dict(sizes)
+    for a in (data, x, y, z):
+        for n in _names(a):
+            if n not in known:
+                raise ValueError(f"axis {n!r} not in mesh axes {mesh.axis_names}")
+    return MeshAxes(data=data, x=x, y=y, z=z, sizes=sizes)
+
+
+# ---------------------------------------------------------------------- #
+# Collective helpers that degrade to identity when the axis is unmapped.
+# These are only legal inside shard_map bodies.
+# ---------------------------------------------------------------------- #
+
+def psum(v, axis: AxisName):
+    n = _names(axis)
+    return jax.lax.psum(v, n) if n else v
+
+
+def pmax(v, axis: AxisName):
+    n = _names(axis)
+    return jax.lax.pmax(v, n) if n else v
+
+
+def all_gather(v, axis: AxisName, *, dim: int, tiled: bool = True):
+    n = _names(axis)
+    if not n:
+        return v
+    out = v
+    for name in n:
+        out = jax.lax.all_gather(out, name, axis=dim, tiled=tiled)
+    return out
+
+
+def psum_scatter(v, axis: AxisName, *, dim: int, tiled: bool = True):
+    n = _names(axis)
+    if not n:
+        return v
+    out = v
+    for name in reversed(n):
+        out = jax.lax.psum_scatter(out, name, scatter_dimension=dim, tiled=tiled)
+    return out
+
+
+def axis_index(axis: AxisName):
+    n = _names(axis)
+    if not n:
+        return jnp.int32(0)
+    idx = jnp.int32(0)
+    for name in n:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def axis_size_in(axes: MeshAxes, axis: AxisName) -> int:
+    return axes.size(axis)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

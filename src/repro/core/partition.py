@@ -1,0 +1,74 @@
+"""Parameter boxing: arrays + their 4D sharding metadata in one tree.
+
+Layer ``init`` functions return trees whose leaves are :class:`Boxed`
+(array + PartitionSpec + flags). ``unbox`` splits that into a pure-array
+params tree (what the optimizer and train step see) and a parallel
+``specs`` tree used for (a) ``shard_map`` in_specs, (b) deciding which
+gradients still need a ``z``-axis reduction (tp_matmul weights are already
+reduce-scattered over ``z`` inside their custom_vjp; everything else is
+replicated over ``z`` and needs an explicit psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any                      # jnp.ndarray or ShapeDtypeStruct
+    spec: P = P()
+    z_reduced: bool = False         # grad already reduced over z (tp weights)
+    y_reduce: bool = False          # grad needs a psum over y (duplicated
+                                    # KV-head weights: each y rank only
+                                    # back-props its own slice)
+
+    # make Boxed an opaque leaf for jax.tree_util
+    def __repr__(self):  # pragma: no cover - debugging aid
+        shape = getattr(self.value, "shape", None)
+        return f"Boxed(shape={shape}, spec={self.spec}, z_reduced={self.z_reduced})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    spec: P
+    z_reduced: bool
+    y_reduce: bool = False
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree) -> Tuple[Any, Any]:
+    """Split a Boxed tree into (arrays, specs) with identical structure."""
+    arrays = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+    specs = jax.tree.map(lambda b: ParamSpec(b.spec, b.z_reduced,
+                                             b.y_reduce), tree,
+                         is_leaf=_is_boxed)
+    return arrays, specs
+
+
+def spec_tree_to_pspecs(specs) -> Any:
+    """ParamSpec tree -> plain PartitionSpec tree (for shard_map in_specs)."""
+    return jax.tree.map(lambda s: s.spec,
+                        specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def z_reduce_grads(grads, specs, axes, psum_fn):
+    """psum grads over z for every param whose grad is not already z-reduced
+    (tp_matmul weights come out of their custom_vjp reduce-scattered over
+    z; replicated params see different z batch shards), and over y for
+    duplicated-KV weights (each y rank back-props only its head slice)."""
+    def one(g, s):
+        if s.y_reduce:
+            g = psum_fn(g, axes.y)
+        if s.z_reduced:
+            return g
+        return psum_fn(g, axes.z)
+    return jax.tree.map(one, grads, specs,
+                        is_leaf=lambda s: isinstance(s, ParamSpec))

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.synthetic import DataConfig, SyntheticText, make_batch

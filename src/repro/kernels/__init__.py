@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) for the
+paper's compute hot spots, with jit wrappers (ops) and jnp oracles (ref)."""

@@ -1,0 +1,103 @@
+"""Flash attention (online softmax) Pallas TPU kernel.
+
+Hot spot: the attention core that the paper inherits from Megatron's fused
+kernels. TPU adaptation: KV-blocked streaming with fp32 (m, l, acc)
+accumulators in VMEM scratch; q blocks of 128 rows on the MXU; causal and
+sliding-window masking by global block indices; GQA handled in the index
+map (kv head = q head // group) so grouped KV is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kv: int, bq: int, bk: int, causal: bool, window: int,
+            scale: float, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    iq = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    jk = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jk < kv_len            # padded keys (ops.py) are invalid
+    if causal:
+        mask &= iq >= jk
+    if window > 0:
+        mask &= (iq - jk) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] \
+        + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "kv_len", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, kv_len: int = 0,
+                    interpret: bool = True):
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0.
+
+    T % bq == 0 and S % bk == 0 (ops.py pads)."""
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, T)
+    bk = min(bk, S)
+    assert T % bq == 0 and S % bk == 0
+    grid = (B, Hq, T // bq, S // bk)
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_kernel, n_kv=grid[3], bq=bq, bk=bk,
+                             causal=causal, window=window, scale=scale,
+                             kv_len=kv_len or S)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels: shape padding to block
+multiples, GQA-aware dispatch, dtype handling. Models call these (behind
+the ``use_kernels`` flag); tests sweep shapes/dtypes against ref.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_matmul import block_matmul as _bmm
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rms
+from repro.kernels.selective_scan import selective_scan as _scan
+
+
+def _pad_to(x, mult: int, axis: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def matmul(a, b, *, bm=128, bn=128, bk=512, interpret=True):
+    """Padded tiled matmul: (M, K) @ (K, N)."""
+    a, M = _pad_to(a, bm, 0)
+    a, K = _pad_to(a, bk, 1)
+    b, _ = _pad_to(b, bk, 0)
+    b, N = _pad_to(b, bn, 1)
+    out = _bmm(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
+                    interpret=True):
+    """(B, Hq, T, D) x (B, Hkv, S, D) padded flash attention.
+
+    Padding keys are masked out by padding k positions past S with -inf
+    handling: we pad T/S and slice back; padded kv rows are masked because
+    causal/global masking uses *true* lengths via explicit masking of the
+    padded region (scores for j >= S get NEG_INF through the window/causal
+    mask only when causal — for the general case we pad S and rely on
+    slicing q rows; kv padding is handled by masking inside via length)."""
+    T0, S0 = q.shape[2], k.shape[2]
+    q, _ = _pad_to(q, bq, 2)
+    k, _ = _pad_to(k, bk, 2)
+    v, _ = _pad_to(v, bk, 2)
+    out = _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                 kv_len=S0, interpret=interpret)
+    return out[:, :, :T0, :]
+
+
+def rmsnorm(x, gamma, *, eps=1e-6, bm=256, interpret=True):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    x2, M = _pad_to(x2, bm, 0)
+    out = _rms(x2, gamma, bm=bm, eps=eps, interpret=interpret)
+    return out[:M].reshape(shape)
+
+
+def selective_scan(x, dt, A, B, C, *, bd=256, ck=128, interpret=True):
+    """Padded selective scan; pads T with dt=0 steps (identity updates)."""
+    T0 = x.shape[1]
+    x, _ = _pad_to(x, ck, 1)
+    dt, _ = _pad_to(dt, ck, 1)
+    B, _ = _pad_to(B, ck, 1)
+    C, _ = _pad_to(C, ck, 1)
+    d0 = x.shape[2]
+    x, _ = _pad_to(x, bd, 2)
+    dt, _ = _pad_to(dt, bd, 2)
+    A, _ = _pad_to(A, bd, 0)
+    out = _scan(x, dt, A, B, C, bd=bd, ck=ck, interpret=interpret)
+    return out[:, :T0, :d0]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def block_matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D). GQA by head grouping."""
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, T, D)
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qf,
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    iq = jnp.arange(T)[:, None]
+    jk = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= iq >= jk
+    if window > 0:
+        mask &= (iq - jk) < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, A, B, C, s0=None):
+    """Sequential oracle. x, dt: (Bt, T, d); A: (d, N); B, C: (Bt, T, N).
+    Returns (y, final_state)."""
+    Bt, T, d = x.shape
+    N = A.shape[-1]
+    s = jnp.zeros((Bt, d, N), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt.astype(jnp.float32)[..., None] * A)
+        dBx = (dtt.astype(jnp.float32) * xt.astype(jnp.float32))[..., None] \
+            * bt.astype(jnp.float32)[:, None, :]
+        s = s * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", s, ct.astype(jnp.float32))
+        return s, y
+
+    xs = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), (x, dt, B, C))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s

@@ -1,0 +1,33 @@
+"""Fused RMSNorm Pallas TPU kernel (row-tiled, fp32 statistics)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
+def rmsnorm(x, gamma, *, bm: int = 256, eps: float = 1e-6,
+            interpret: bool = True):
+    """x: (M, D); gamma: (D,). M % bm == 0 (ops.py pads)."""
+    M, D = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, D), lambda mi: (mi, 0)),
+                  pl.BlockSpec((D,), lambda mi: (0,))],
+        out_specs=pl.BlockSpec((bm, D), lambda mi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
+        interpret=interpret,
+    )(x, gamma)

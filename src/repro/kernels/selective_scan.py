@@ -1,0 +1,71 @@
+"""Selective-scan (Mamba S6) Pallas TPU kernel.
+
+Hot spot: jamba's recurrence. TPU adaptation: channels live on the VPU
+lanes (block over d), the sequence is processed in chunks with the carry
+state in VMEM scratch across the sequential chunk grid dimension; within a
+chunk a fori_loop steps time with fully vectorized (bd, N) updates. The
+grid is (B, d_blocks, chunks) — chunks is minor-most so the carry is
+correct, and (B, d_blocks) parallelize.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+            ck: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    a = a_ref[...].astype(jnp.float32)              # (bd, N)
+
+    def step(t, s):
+        xt = x_ref[0, t, :].astype(jnp.float32)     # (bd,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)     # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)
+        dA = jnp.exp(dtt[:, None] * a)              # (bd, N)
+        s = s * dA + (dtt * xt)[:, None] * bt[None, :]
+        y_ref[0, t, :] = jnp.sum(s * ct[None, :], axis=-1).astype(
+            y_ref.dtype)
+        return s
+
+    s_ref[...] = jax.lax.fori_loop(0, ck, step, s_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "ck", "interpret"))
+def selective_scan(x, dt, A, B, C, *, bd: int = 256, ck: int = 128,
+                   interpret: bool = True):
+    """x, dt: (Bt, T, d); A: (d, N); B, C: (Bt, T, N). Returns y (Bt, T, d).
+
+    d % bd == 0 and T % ck == 0 (ops.py pads)."""
+    Bt, T, d = x.shape
+    N = A.shape[-1]
+    bd = min(bd, d)
+    ck = min(ck, T)
+    assert d % bd == 0 and T % ck == 0
+    grid = (Bt, d // bd, T // ck)
+    kern = functools.partial(_kernel, ck=ck, n_chunks=grid[2])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ck, bd), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, ck, bd), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((bd, N), lambda b, di, ci: (di, 0)),
+            pl.BlockSpec((1, ck, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((1, ck, N), lambda b, di, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ck, bd), lambda b, di, ci: (b, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((Bt, T, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,1 @@
+"""Meshes, step builders, dry-run, training and serving drivers."""

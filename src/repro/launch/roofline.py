@@ -1,0 +1,177 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_bw_per_chip
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition SPMD
+program == per device). Collective bytes are NOT in cost_analysis; we parse
+the optimized HLO (``compiled.as_text()``) and sum effective per-device
+wire bytes of every collective op with the bandwidth-optimal factors
+(all-reduce 2(p-1)/p, all-gather/reduce-scatter (p-1)/p, all-to-all
+(p-1)/p, collective-permute 1).
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# the result type may be a tuple containing `/*index=N*/` comments
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*(\([^)]*\)|\S+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[\d,]+\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]   # effective per-device wire bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    vol: Dict[str, float] = {}
+    seen_start = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:
+            continue  # the -start carries the shape
+        p = _group_size(line)
+        if p <= 1:
+            continue
+        nbytes = _shape_bytes(type_str)
+        if kind == "all-reduce":
+            eff = 2.0 * (p - 1) / p * nbytes
+        elif kind in ("all-gather",):
+            eff = (p - 1) / p * nbytes          # result-shaped
+        elif kind in ("reduce-scatter",):
+            eff = (p - 1) * nbytes               # result is the 1/p shard
+        elif kind == "all-to-all":
+            eff = (p - 1) / p * nbytes
+        else:  # collective-permute
+            eff = float(nbytes)
+        counts[kind] = counts.get(kind, 0) + 1
+        vol[kind] = vol.get(kind, 0.0) + eff
+    return CollectiveStats(counts, vol)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_t: float
+    memory_t: float
+    collective_t: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, int]
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for prefill/decode,
+    divided by device count (to compare with per-device HLO flops)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        total = 6.0 * n * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / n_devices
+
+
+def analyze(compiled, cfg, shape, n_devices: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    ct = flops / PEAK_FLOPS
+    mt = hbm / HBM_BW
+    lt = stats.total_bytes / ICI_BW
+    dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(cfg, shape, n_devices)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=stats.total_bytes,
+        compute_t=ct, memory_t=mt, collective_t=lt, dominant=dom,
+        model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
+        collectives=stats.bytes_by_kind,
+        collective_counts=stats.counts)
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out

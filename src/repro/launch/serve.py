@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  python -m repro.launch.serve --arch qwen3-1.7b --batch 4 \\
+      --prompt-len 32 --gen 16 --mesh 2,2,2,1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.partition import spec_tree_to_pspecs
+from repro.launch import mesh as LM
+from repro.launch import steps as ST
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="2,2,2,1")
+    args = ap.parse_args()
+
+    mesh = LM.make_smoke_mesh(tuple(int(x) for x in args.mesh.split(",")),
+                              ("data", "x", "y", "z"))
+    axes = LM.bind_4d(mesh)
+    cfg = get_config(args.arch)
+    if args.preset == "smoke":
+        cfg = cfg.reduced()
+    dtype = jnp.float32
+
+    params, specs = ST.init_model(cfg, axes, jax.random.PRNGKey(0),
+                                  dtype=dtype)
+    params = ST.device_put_tree(mesh, params, spec_tree_to_pspecs(specs))
+
+    S_max = args.prompt_len + args.gen
+    pre_build, _ = ST.make_prefill_step(cfg, mesh, axes, dtype=dtype)
+    pre_fn, bt, ct = pre_build(args.batch, args.prompt_len, S_max)
+    dec_build, _ = ST.make_decode_step(cfg, mesh, axes, dtype=dtype)
+    dec_fn, _ = dec_build(args.batch, S_max)
+
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = jnp.asarray(rng.randn(
+            args.batch, cfg.encoder.n_ctx, cfg.encoder.input_dim),
+            jnp.float32)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.asarray(rng.randn(
+            args.batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+
+    caches = ST.zeros_caches(mesh, ct)
+    t0 = time.time()
+    logits, caches = pre_fn(params, caches, batch)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    print(f"prefill {args.batch}x{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s")
+
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, caches = dec_fn(params, caches, tok, pos)
+        # greedy over the local vocab shard (full argmax needs a psum-max
+        # merge across y; for the demo we keep it shard-local)
+        tok = jnp.argmax(logits[:, 0, :], axis=-1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    print("generated ids:\n", gen)
+    print(f"decode: {args.gen - 1} steps x batch {args.batch} = "
+          f"{(args.gen - 1) * args.batch / dt:,.1f} tok/s")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("SERVE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Step builders: jitted, shard_map'ped train / prefill / decode steps.
+
+This is the runtime core every entry point shares (smoke tests, the
+dry-run, the training driver, the serving driver). Everything inside the
+mapped functions is *manual* SPMD: local shards + the paper's explicit
+collectives (core.parallel); the specs computed here are the single source
+of truth for how global arrays are laid out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.overdecompose import split_batch
+from repro.core.partition import ParamSpec, spec_tree_to_pspecs, unbox, \
+    z_reduce_grads
+from repro.models import decoder as D
+from repro.models import encdec as ED
+from repro.models.base import ArchConfig
+from repro.optim import adamw as OPT
+
+
+# ---------------------------------------------------------------------- #
+# model init (boxed -> (params, specs))
+# ---------------------------------------------------------------------- #
+
+def init_model(cfg: ArchConfig, axes: M.MeshAxes, key=None, *,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if cfg.arch_type == "audio":
+        boxed = ED.encdec_init(key, cfg, axes, dtype=dtype,
+                               abstract=abstract)
+    else:
+        boxed = D.decoder_init(key, cfg, axes, dtype=dtype,
+                               abstract=abstract)
+    return unbox(boxed)
+
+
+# ---------------------------------------------------------------------- #
+# batch specs
+# ---------------------------------------------------------------------- #
+
+def batch_struct(cfg: ArchConfig, axes: M.MeshAxes, global_batch: int,
+                 seq: int, *, kind: str = "train",
+                 dtype=jnp.bfloat16):
+    """GLOBAL ShapeDtypeStructs + PartitionSpecs for one batch."""
+    bax = axes.batch_axes()
+    bspec = axes.pspec(bax, None)
+    toks = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    out: Dict[str, Tuple[Any, P]] = {"tokens": (toks, bspec)}
+    if kind == "train":
+        out["labels"] = (toks, bspec)
+    if cfg.arch_type == "vlm" and kind in ("train", "prefill"):
+        ec = cfg.encoder
+        out["image_embeds"] = (
+            jax.ShapeDtypeStruct((global_batch, ec.n_ctx, ec.input_dim),
+                                 dtype), axes.pspec(bax, None, None))
+    if cfg.arch_type == "audio" and kind in ("train", "prefill"):
+        ec = cfg.encoder
+        out["frames"] = (
+            jax.ShapeDtypeStruct((global_batch, ec.n_ctx, cfg.d_model),
+                                 dtype), axes.pspec(bax, None, axes.x))
+    return out
+
+
+def _structs(tree):
+    return jax.tree.map(lambda t: t[0], tree,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and len(t) == 2)
+
+
+def _pspecs(tree):
+    return jax.tree.map(lambda t: t[1], tree,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and len(t) == 2)
+
+
+# ---------------------------------------------------------------------- #
+# train step
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    overdecompose: int = 2      # paper §4.2 (2 batch-shards); 1 = off
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save matmul outputs)
+    xent_chunks: int = 1
+    dtype: Any = jnp.bfloat16
+    unroll_layers: bool = False  # exact HLO costs for the dry-run
+    mtp_weight: float = 0.0      # DeepSeek MTP loss weight (0 = off)
+
+
+def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions):
+    if cfg.arch_type == "audio":
+        def f(params, batch):
+            return ED.encdec_loss(params, cfg, axes, batch["frames"],
+                                  batch["tokens"], batch["labels"],
+                                  unroll=opts.unroll_layers)
+        return f
+
+    def f(params, batch):
+        return D.lm_loss(params, cfg, axes, batch["tokens"],
+                         batch["labels"],
+                         image_embeds=batch.get("image_embeds"),
+                         remat=opts.remat, xent_chunks=opts.xent_chunks,
+                         unroll=opts.unroll_layers,
+                         remat_policy=opts.remat_policy,
+                         mtp_weight=opts.mtp_weight)
+    return f
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
+                    opt_cfg: OPT.AdamWConfig,
+                    opts: TrainOptions = TrainOptions()):
+    """Returns (jitted_step, param_pspecs, state_pspecs).
+
+    jitted_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    _, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    spspecs = OPT.state_pspecs(pspecs)
+    loss_fn = _loss_fn(cfg, axes, opts)
+
+    def scalar_loss(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        vg = jax.value_and_grad(scalar_loss, has_aux=True)
+        if opts.overdecompose > 1:
+            shards = split_batch(batch, opts.overdecompose)
+            loss = metrics = grads = None
+            for i in range(opts.overdecompose):
+                sub = jax.tree.map(lambda x: x[i], shards)
+                (li, mi), gi = vg(params, sub)
+                loss = li if loss is None else loss + li
+                metrics = mi if metrics is None else jax.tree.map(
+                    jnp.add, metrics, mi)
+                grads = gi if grads is None else jax.tree.map(
+                    jnp.add, grads, gi)
+            n = opts.overdecompose
+            loss = loss / n
+            metrics = jax.tree.map(lambda v: v / n, metrics)
+            grads = jax.tree.map(lambda g: g / n, grads)
+        else:
+            (loss, metrics), grads = vg(params, batch)
+
+        # data-parallel gradient all-reduce (paper §3.1) + z reduction for
+        # params whose grads are not already z-reduced by their custom vjp
+        grads = jax.tree.map(lambda g: M.psum(g, axes.data), grads)
+        grads = z_reduce_grads(grads, specs, axes, M.psum)
+        params, opt_state, om = OPT.apply_updates(params, grads, opt_state,
+                                                  specs, axes, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    bstruct = batch_struct(cfg, axes, 1, 1)  # spec shapes don't matter here
+    bpspecs = _pspecs(bstruct)
+    mspec = P()
+    mkeys = ["loss", "grad_norm", "lr", "xent"]
+    if cfg.arch_type != "audio":
+        mkeys.append("aux")
+        if opts.mtp_weight > 0 and cfg.mtp_depth > 0:
+            mkeys.append("mtp")
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, spspecs, bpspecs),
+        out_specs=(pspecs, spspecs, {k: mspec for k in mkeys}),
+        check_vma=False)
+    return jax.jit(mapped, donate_argnums=(0, 1)), pspecs, spspecs
+
+
+# ---------------------------------------------------------------------- #
+# serve steps
+# ---------------------------------------------------------------------- #
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
+                     seqshard: bool = False, dtype=jnp.bfloat16,
+                     unroll: bool = False):
+    """jitted(params, caches, tokens, pos) -> (logits, caches)."""
+    _, specs = init_model(cfg, axes, abstract=True, dtype=dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    bspec = axes.pspec(axes.batch_axes(), None)
+    if seqshard:
+        bspec = P(None, None)  # batch 1: tokens replicated
+
+    if cfg.arch_type == "audio":
+        def step(params, caches, tokens, pos):
+            return ED.encdec_decode_step(params, cfg, axes, tokens, caches,
+                                         pos, unroll=unroll)
+    else:
+        def step(params, caches, tokens, pos):
+            return D.decode_step(params, cfg, axes, tokens, caches, pos,
+                                 seqshard=seqshard, unroll=unroll)
+        cache_tree = None  # caller provides cache specs
+
+    def cspecs(batch_global, seq):
+        if cfg.arch_type == "audio":
+            return ED.encdec_cache_specs(cfg, axes, batch_global, seq,
+                                         dtype=dtype)
+        return D.decoder_cache_specs(cfg, axes, batch_global, seq,
+                                     seqshard=seqshard, dtype=dtype)
+
+    def build(batch_global, seq):
+        ct = cspecs(batch_global, seq)
+        cache_pspecs = _pspecs(ct)
+        logits_spec = (axes.pspec(axes.batch_axes(), None, axes.y)
+                       if not seqshard else axes.pspec(None, None, axes.y))
+        mapped = shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, cache_pspecs, bspec, P()),
+            out_specs=(logits_spec, cache_pspecs),
+            check_vma=False)
+        return jax.jit(mapped, donate_argnums=(1,)), ct
+
+    return build, pspecs
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
+                      dtype=jnp.bfloat16, unroll: bool = False):
+    """jitted(params, caches, batch) -> (last_logits, caches)."""
+    _, specs = init_model(cfg, axes, abstract=True, dtype=dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+
+    def step(params, caches, batch):
+        if cfg.arch_type == "audio":
+            enc = ED.encoder_apply(params, cfg, axes, batch["frames"],
+                                   unroll=unroll)
+            return ED.decoder_apply(params, cfg, axes, batch["tokens"],
+                                    enc, mode="prefill", caches=caches,
+                                    unroll=unroll)
+        return D.prefill(params, cfg, axes, batch["tokens"], caches,
+                         image_embeds=batch.get("image_embeds"),
+                         unroll=unroll)
+
+    def build(batch_global, seq, cache_seq):
+        bt = batch_struct(cfg, axes, batch_global, seq, kind="prefill",
+                          dtype=dtype)
+        if cfg.arch_type == "audio":
+            ct = ED.encdec_cache_specs(cfg, axes, batch_global, cache_seq,
+                                       dtype=dtype)
+        else:
+            ct = D.decoder_cache_specs(cfg, axes, batch_global, cache_seq,
+                                       dtype=dtype)
+        logits_spec = axes.pspec(axes.batch_axes(), None, axes.y)
+        mapped = shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, _pspecs(ct), _pspecs(bt)),
+            out_specs=(logits_spec, _pspecs(ct)),
+            check_vma=False)
+        return jax.jit(mapped, donate_argnums=(1,)), bt, ct
+
+    return build, pspecs
+
+
+# ---------------------------------------------------------------------- #
+# materialization helpers (host -> device with the right shardings)
+# ---------------------------------------------------------------------- #
+
+def device_put_tree(mesh: Mesh, values, pspec_tree):
+    return jax.tree.map(
+        lambda v, s: jax.device_put(v, NamedSharding(mesh, s)),
+        values, pspec_tree)
+
+
+def zeros_caches(mesh: Mesh, cache_tree):
+    """Materialize zero-filled caches from a (struct, spec) tree."""
+    def one(t):
+        st, sp = t
+        return jax.device_put(jnp.zeros(st.shape, st.dtype),
+                              NamedSharding(mesh, sp))
+    return jax.tree.map(one, cache_tree,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and len(t) == 2
+                        and isinstance(t[0], jax.ShapeDtypeStruct))

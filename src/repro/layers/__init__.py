@@ -1,0 +1,1 @@
+"""Neural network layers under the 4D tensor-parallel layout."""

@@ -1,0 +1,580 @@
+"""Attention mixers under the 4D layout.
+
+Heads are sharded over ``y`` (the output axis of the fused QKV projection,
+a paper "normal" layer); the output projection is a paper "transposed"
+layer (contract over ``y``, all-reduce over ``y``), returning the residual
+to its x-sharded layout with zero boundary communication (§4.1).
+
+Variants: MHA/GQA (optionally sliding-window and/or qk-norm), cross
+attention (whisper), and DeepSeek MLA (low-rank latent KV, with the
+absorbed-matmul decode path).
+
+Decode supports two cache layouts:
+  * batch-sharded (default): cache (B_local, S, kv_local, hd)
+  * sequence-sharded over ``data`` (long-context, global_batch=1): partial
+    attention per shard merged with a log-sum-exp psum — a beyond-paper
+    extension recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+from repro.layers.rotary import apply_rope, apply_rope_interleaved_neox
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- #
+# plain (replicated-param) per-head RMSNorm, used for qk-norm and MLA
+# latent norms — head_dim / latent dims are never sharded.
+# ---------------------------------------------------------------------- #
+
+def _plain_rms(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# attention core (pure jnp oracle; the Pallas flash kernel in
+# repro.kernels mirrors this and is validated against it)
+# ---------------------------------------------------------------------- #
+
+def attn_core(q, k, v, *, causal: bool = True, window: int = 0,
+              q_pos0=0, scale: Optional[float] = None,
+              chunked_threshold: int = 2048):
+    """q: (B, Tq, nq, d); k/v: (B, Tk, nkv, d); GQA via head grouping.
+
+    ``q_pos0`` is the absolute position of q[:, 0] (for cached decode).
+    ``window`` > 0 enables sliding-window attention (mistral-style).
+    Long sequences route to the chunked online-softmax path (flash-style
+    O(T*chunk) memory — the jnp analogue of kernels/flash_attention)."""
+    B, Tq, nq, d = q.shape
+    Tk, nkv = k.shape[1], k.shape[2]
+    if max(Tq, Tk) > chunked_threshold:
+        return attn_core_chunked(q, k, v, causal=causal, window=window,
+                                 q_pos0=q_pos0, scale=scale)
+    g = nq // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, Tq, nkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    iq = (jnp.arange(Tq) + q_pos0)[:, None]
+    jk = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= iq >= jk
+    if window > 0:
+        mask &= (iq - jk) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Tq, nq, v.shape[-1]).astype(q.dtype)  # dv may != dq (MLA)
+
+
+def attn_core_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_pos0=0, scale: Optional[float] = None,
+                      bq: int = 512, bk: int = 1024):
+    """Flash-style online-softmax attention in pure jnp: nested scans over
+    q and kv chunks with fp32 (m, l, acc) carries. This is what the Pallas
+    kernel does on TPU; the jnp version keeps the dry-run HLO honest about
+    memory (no (T, S) score materialization) and compiles fast."""
+    B, Tq, nq, d = q.shape
+    Tk, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    # pad to chunk multiples
+    pq = (-Tq) % bq
+    pk = (-Tk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nQ, nK = qp.shape[1] // bq, kp.shape[1] // bk
+
+    qc = jnp.moveaxis(qp.reshape(B, nQ, bq, nkv, g, d), 1, 0)
+    kc = jnp.moveaxis(kp.reshape(B, nK, bk, nkv, k.shape[-1]), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(B, nK, bk, nkv, v.shape[-1]), 1, 0)
+
+    def q_step(_, qi_and_block):
+        qi, qb = qi_and_block                       # qb (B, bq, nkv, g, d)
+        qb = qb.astype(jnp.float32)
+
+        def kv_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kb, vb = ki_and_kv
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb,
+                           kb.astype(jnp.float32)) * scale
+            iq = q_pos0 + qi * bq + jnp.arange(bq)[:, None]
+            jk = ki * bk + jnp.arange(bk)[None, :]
+            mask = jk < Tk
+            if causal:
+                mask &= iq >= jk
+            if window > 0:
+                mask &= (iq - jk) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = alpha[..., None] * acc + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), 0
+
+        m0 = jnp.full((B, nkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, bq, v.shape[-1]), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nK), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,h,g,bq,d)
+        return 0, jnp.moveaxis(out, 3, 1)             # (B,bq,h,g,d)
+
+    _, outs = jax.lax.scan(q_step, 0, (jnp.arange(nQ), qc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nQ * bq, nq, v.shape[-1])
+    return out[:, :Tq].astype(q.dtype)
+
+
+def decode_core_seqsharded(q, k, v, pos, axes, *, window: int = 0,
+                           scale: Optional[float] = None):
+    """Single-token decode against a KV cache whose *sequence* dim is
+    sharded over the data axis. Partial softmax per shard, merged with a
+    log-sum-exp psum over ``data``.
+
+    q: (B, 1, nq, d); k/v: (B, S_local, nkv, d); pos: scalar absolute
+    position of the query token (cache entries > pos are masked)."""
+    B, _, nq, d = q.shape
+    S_local, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    shard = M.axis_index(axes.data)
+    jk = shard * S_local + jnp.arange(S_local)  # global cache positions
+    qg = q.reshape(B, nkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    ok = jk <= pos
+    if window > 0:
+        ok &= (pos - jk) < window
+    scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
+    m_local = jnp.max(scores, axis=-1)
+    m = M.pmax(m_local, axes.data)
+    e = jnp.exp(scores - m[..., None])
+    num = jnp.einsum("bhgk,bkhd->bhgd", e, v.astype(jnp.float32))
+    den = jnp.sum(e, axis=-1)
+    num = M.psum(num, axes.data)
+    den = M.psum(den, axes.data)
+    out = num / den[..., None]
+    return out.reshape(B, 1, nq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# GQA attention layer
+# ---------------------------------------------------------------------- #
+
+def kv_layout(cfg, axes: M.MeshAxes):
+    """(nq_local, nkv_local, duplicated?). When G_y > n_kv_heads (e.g. the
+    16-way 1D baseline on a kv=8 GQA arch), KV heads are *duplicated*
+    across y ranks — Megatron's standard GQA-under-wide-TP treatment."""
+    nq_l = cfg.n_heads // axes.gy
+    if cfg.n_kv_heads % axes.gy == 0:
+        return nq_l, cfg.n_kv_heads // axes.gy, False
+    if axes.gy % cfg.n_kv_heads or cfg.n_heads % axes.gy:
+        raise ValueError(f"{cfg.name}: cannot lay out {cfg.n_kv_heads} kv "
+                         f"heads on G_y={axes.gy}")
+    return nq_l, 1, True
+
+
+def attn_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16,
+              stack=(), abstract=False, cross: bool = False):
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    _, _, dup = kv_layout(cfg, axes)
+    keys = jax.random.split(key, 4)
+    p = {}
+    if dup and not cross:
+        assert not getattr(cfg, "attn_bias", False), \
+            "bias unsupported in duplicated-KV layout"
+        p["wq"] = PP.tp_linear_init(keys[0], cfg.d_model, nq * hd, axes,
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+        # full (small) kv projection, replicated over y; each rank slices
+        # its duplicated head. Grads need a y psum (y_reduce).
+        wkv = PP.tp_linear_init(keys[1], cfg.d_model, 2 * nkv * hd, axes,
+                                in_shard="x", out_shard=None, dtype=dtype,
+                                stack=stack, abstract=abstract)
+        wkv.y_reduce = True
+        p["wkv_dup"] = wkv
+        p["wo"] = PP.tp_linear_init(keys[2], nq * hd, cfg.d_model, axes,
+                                    in_shard="y", out_shard="x",
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+        if getattr(cfg, "qk_norm", False):
+            spec = P(*([None] * (len(stack) + 1)))
+            def mk():
+                if abstract:
+                    return Boxed(jax.ShapeDtypeStruct((*stack, hd), dtype),
+                                 spec)
+                return Boxed(jnp.ones((*stack, hd), dtype), spec)
+            p["q_norm"], p["k_norm"] = mk(), mk()
+        return p
+    if cross:
+        # q from decoder stream; kv from encoder states
+        p["wq"] = PP.tp_linear_init(keys[0], cfg.d_model, nq * hd, axes,
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+        p["wk"] = PP.tp_linear_init(keys[1], cfg.d_model, nkv * hd,
+                                     axes, dtype=dtype, stack=stack,
+                                     abstract=abstract)
+        p["wv"] = PP.tp_linear_init(keys[3], cfg.d_model, nkv * hd,
+                                    axes, dtype=dtype, stack=stack,
+                                    abstract=abstract)
+    else:
+        # separate q/k/v weights: a fused (nq+2nkv)*hd matrix column-
+        # sharded over y would change its *global* layout meaning with
+        # G_y (per-shard [q|k|v] chunks) — mesh-dependent semantics.
+        p["wq"] = PP.tp_linear_init(keys[0], cfg.d_model, nq * hd, axes,
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+        p["wk"] = PP.tp_linear_init(keys[1], cfg.d_model, nkv * hd, axes,
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+        p["wv"] = PP.tp_linear_init(keys[3], cfg.d_model, nkv * hd, axes,
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract)
+    p["wo"] = PP.tp_linear_init(keys[2], nq * hd, cfg.d_model, axes,
+                                in_shard="y", out_shard="x", dtype=dtype,
+                                stack=stack, abstract=abstract)
+    if getattr(cfg, "attn_bias", False):
+        p["bq"] = PP.tp_bias_init(nq * hd, axes, dtype=dtype,
+                                  stack=stack, abstract=abstract)
+        if not cross:
+            p["bk"] = PP.tp_bias_init(nkv * hd, axes, dtype=dtype,
+                                      stack=stack, abstract=abstract)
+            p["bv"] = PP.tp_bias_init(nkv * hd, axes, dtype=dtype,
+                                      stack=stack, abstract=abstract)
+        p["bo"] = PP.tp_bias_init(cfg.d_model, axes, out_shard="x",
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract)
+    if getattr(cfg, "qk_norm", False):
+        spec = P(*([None] * (len(stack) + 1)))
+        def mk():
+            if abstract:
+                return Boxed(jax.ShapeDtypeStruct((*stack, hd), dtype), spec)
+            return Boxed(jnp.ones((*stack, hd), dtype), spec)
+        p["q_norm"], p["k_norm"] = mk(), mk()
+    return p
+
+
+def _split_qkv(qkv, nq_l, nkv_l, hd):
+    B, T = qkv.shape[:2]
+    q, k, v = jnp.split(qkv, [nq_l * hd, (nq_l + nkv_l) * hd], axis=-1)
+    return (q.reshape(B, T, nq_l, hd), k.reshape(B, T, nkv_l, hd),
+            v.reshape(B, T, nkv_l, hd))
+
+
+def attn_apply(p, h, cfg, axes: M.MeshAxes, *, positions, mode="train",
+               cache=None, window: int = 0, causal: bool = True):
+    """Returns (out, new_cache).
+
+    mode: 'train' (no cache), 'prefill' (build cache), 'decode' (T==1,
+    read+update cache), 'decode_seqshard' (cache seq-sharded over data).
+    """
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    nq_l, nkv_l, dup = kv_layout(cfg, axes)
+    if dup:
+        B, T = h.shape[:2]
+        q = PP.tp_matmul(h, p["wq"], axes, "x", "y")
+        q = q.reshape(B, T, nq_l, hd)
+        kv = PP.tp_matmul(h, p["wkv_dup"], axes, "x", None)
+        kv = kv.reshape(B, T, 2, cfg.n_kv_heads, hd)
+        # this rank's duplicated head: kv head j serves q heads [j*g, ...)
+        head = (M.axis_index(axes.y) * cfg.n_kv_heads) // axes.gy
+        kv = jax.lax.dynamic_slice_in_dim(kv, head, 1, axis=3)
+        k, v = kv[:, :, 0], kv[:, :, 1]        # (B, T, 1, hd)
+    else:
+        B, T = h.shape[:2]
+        q = PP.tp_matmul(h, p["wq"], axes, "x", "y")
+        k = PP.tp_matmul(h, p["wk"], axes, "x", "y")
+        v = PP.tp_matmul(h, p["wv"], axes, "x", "y")
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(B, T, nq_l, hd)
+        k = k.reshape(B, T, nkv_l, hd)
+        v = v.reshape(B, T, nkv_l, hd)
+    if "q_norm" in p:
+        q = _plain_rms(q, p["q_norm"])
+        k = _plain_rms(k, p["k_norm"])
+    if cfg.rotary_pct > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k_pos = positions
+        k = apply_rope(k, k_pos, cfg.rope_theta, cfg.rotary_pct)
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        out = attn_core(q, k, v, causal=causal, window=window)
+        if mode == "prefill":
+            kc, vc = cache["k"], cache["v"]
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, 0, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
+        pos = positions[:, 0]  # (B,)
+        kc, vc = cache["k"], cache["v"]
+        idx = pos[0]  # uniform position across batch (standard batch decode)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        S = kc.shape[1]
+        jk = jnp.arange(S)
+        ok = jk <= idx
+        if window > 0:
+            ok &= (idx - jk) < window
+        out = _decode_attn(q, kc, vc, ok)
+    elif mode == "decode_seqshard":
+        # global_batch=1 long-context: cache seq dim sharded over data; the
+        # fresh token's kv is written by the owning shard only.
+        pos = positions[0, 0]
+        kc, vc = cache["k"], cache["v"]
+        S_local = kc.shape[1]
+        shard = M.axis_index(axes.data)
+        local_idx = pos - shard * S_local
+        owns = (local_idx >= 0) & (local_idx < S_local)
+        safe = jnp.clip(local_idx, 0, S_local - 1)
+        kw = jnp.where(owns, k.astype(kc.dtype),
+                       jax.lax.dynamic_slice(kc, (0, safe, 0, 0),
+                                             k.shape))
+        vw = jnp.where(owns, v.astype(vc.dtype),
+                       jax.lax.dynamic_slice(vc, (0, safe, 0, 0), v.shape))
+        kc = jax.lax.dynamic_update_slice(kc, kw, (0, safe, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vw, (0, safe, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        out = decode_core_seqsharded(q, kc, vc, pos, axes, window=window)
+    else:
+        raise ValueError(mode)
+
+    B, T = out.shape[:2]
+    o = PP.tp_matmul(out.reshape(B, T, nq_l * hd), p["wo"], axes, "y", "x")
+    if "bo" in p:
+        o = o + p["bo"]
+    return o, new_cache
+
+
+def _decode_attn(q, kc, vc, ok):
+    B, _, nq, d = q.shape
+    nkv = kc.shape[2]
+    g = nq // nkv
+    scores = jnp.einsum("bhgd,bkhd->bhgk",
+                        q.reshape(B, nkv, g, d).astype(jnp.float32),
+                        kc.astype(jnp.float32)) / math.sqrt(d)
+    scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, vc.astype(jnp.float32))
+    return out.reshape(B, 1, nq, d).astype(q.dtype)
+
+
+def attn_cache_spec(cfg, axes: M.MeshAxes, batch_global, seq, *,
+                    dtype=jnp.bfloat16, seqshard: bool = False):
+    """GLOBAL ShapeDtypeStructs + PartitionSpecs for this layer's KV cache.
+
+    In the duplicated-KV layout the cache's global head dim is G_y (one
+    duplicated head per y rank)."""
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    _, nkv_l, dup = kv_layout(cfg, axes)
+    heads_global = axes.gy if dup else cfg.n_kv_heads
+    if seqshard:
+        spec = axes.pspec(None, axes.data, axes.y, None)
+    else:
+        spec = axes.pspec(axes.batch_axes(), None, axes.y, None)
+    shape = (batch_global, seq, heads_global, hd)
+    return {"k": (jax.ShapeDtypeStruct(shape, dtype), spec),
+            "v": (jax.ShapeDtypeStruct(shape, dtype), spec)}
+
+
+# ---------------------------------------------------------------------- #
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------- #
+
+def cross_attn_apply(p, h, enc_kv, cfg, axes: M.MeshAxes):
+    """enc_kv: precomputed (k, v) from encoder states, (B, S_enc, nkv_l, hd)."""
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    nq_l = cfg.n_heads // axes.gy
+    B, T = h.shape[:2]
+    q = PP.tp_matmul(h, p["wq"], axes, "x", "y").reshape(B, T, nq_l, hd)
+    k, v = enc_kv
+    out = attn_core(q, k, v, causal=False)
+    o = PP.tp_matmul(out.reshape(B, T, nq_l * hd), p["wo"], axes, "y", "x")
+    if "bo" in p:
+        o = o + p["bo"]
+    return o
+
+
+def cross_attn_kv(p, enc_states, cfg, axes: M.MeshAxes):
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    nkv_l = cfg.n_kv_heads // axes.gy
+    B, S = enc_states.shape[:2]
+    k = PP.tp_matmul(enc_states, p["wk"], axes, "x", "y")
+    v = PP.tp_matmul(enc_states, p["wv"], axes, "x", "y")
+    return (k.reshape(B, S, nkv_l, hd), v.reshape(B, S, nkv_l, hd))
+
+
+# ---------------------------------------------------------------------- #
+# DeepSeek Multi-head Latent Attention (MLA)
+# ---------------------------------------------------------------------- #
+
+def mla_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
+             abstract=False):
+    m = cfg.mla
+    nq = cfg.n_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    from jax.sharding import PartitionSpec as P
+
+    def rep_norm(dim):
+        spec = P(*([None] * (len(stack) + 1)))
+        if abstract:
+            return Boxed(jax.ShapeDtypeStruct((*stack, dim), dtype), spec)
+        return Boxed(jnp.ones((*stack, dim), dtype), spec)
+
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = PP.tp_linear_init(ks[0], cfg.d_model, m.q_lora_rank,
+                                      axes, in_shard="x", out_shard=None,
+                                      dtype=dtype, stack=stack,
+                                      abstract=abstract)
+        p["q_norm"] = rep_norm(m.q_lora_rank)
+        p["w_uq"] = PP.tp_linear_init(ks[1], m.q_lora_rank, nq * qk_dim,
+                                      axes, in_shard=None, out_shard="y",
+                                      dtype=dtype, stack=stack,
+                                      abstract=abstract)
+    else:
+        p["w_q"] = PP.tp_linear_init(ks[1], cfg.d_model, nq * qk_dim, axes,
+                                     dtype=dtype, stack=stack,
+                                     abstract=abstract)
+    p["w_dkv"] = PP.tp_linear_init(
+        ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_dim, axes,
+        in_shard="x", out_shard=None, dtype=dtype, stack=stack,
+        abstract=abstract)
+    p["kv_norm"] = rep_norm(m.kv_lora_rank)
+    p["w_uk"] = PP.tp_linear_init(ks[3], m.kv_lora_rank, nq * m.qk_nope_dim,
+                                  axes, in_shard=None, out_shard="y",
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract)
+    p["w_uv"] = PP.tp_linear_init(ks[4], m.kv_lora_rank, nq * m.v_dim, axes,
+                                  in_shard=None, out_shard="y", dtype=dtype,
+                                  stack=stack, abstract=abstract)
+    p["wo"] = PP.tp_linear_init(ks[5], nq * m.v_dim, cfg.d_model, axes,
+                                in_shard="y", out_shard="x", dtype=dtype,
+                                stack=stack, abstract=abstract)
+    return p
+
+
+def _mla_q(p, h, cfg, axes, positions):
+    m = cfg.mla
+    nq_l = cfg.n_heads // axes.gy
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    B, T = h.shape[:2]
+    if "w_dq" in p:
+        cq = PP.tp_matmul(h, p["w_dq"], axes, "x", None)
+        cq = _plain_rms(cq, p["q_norm"])
+        q = PP.tp_matmul(cq, p["w_uq"], axes, None, "y")
+    else:
+        q = PP.tp_matmul(h, p["w_q"], axes, "x", "y")
+    q = q.reshape(B, T, nq_l, qk_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope_interleaved_neox(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p, h, cfg, axes: M.MeshAxes, *, positions, mode="train",
+              cache=None):
+    """MLA forward. train/prefill: materialized per-head K/V; decode:
+    absorbed matmuls against the compressed (c_kv, k_rope) cache."""
+    m = cfg.mla
+    nq_l = cfg.n_heads // axes.gy
+    B, T = h.shape[:2]
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+
+    dkv = PP.tp_matmul(h, p["w_dkv"], axes, "x", None)
+    ckv, k_rope = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    ckv = _plain_rms(ckv, p["kv_norm"])
+    k_rope = apply_rope_interleaved_neox(k_rope[:, :, None, :], positions,
+                                         cfg.rope_theta)  # (B,T,1,rope)
+    q_nope, q_rope = _mla_q(p, h, cfg, axes, positions)
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        k_nope = PP.tp_matmul(ckv, p["w_uk"], axes, None, "y")
+        k_nope = k_nope.reshape(B, T, nq_l, m.qk_nope_dim)
+        v = PP.tp_matmul(ckv, p["w_uv"], axes, None, "y")
+        v = v.reshape(B, T, nq_l, m.v_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, T, nq_l, m.qk_rope_dim))],
+            axis=-1)
+        out = attn_core(q, k, v, causal=True, scale=scale)
+        if mode == "prefill":
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+            rc = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope[:, :, 0, :].astype(
+                    cache["k_rope"].dtype), (0, 0, 0))
+            new_cache = {"ckv": cc, "k_rope": rc}
+    elif mode == "decode":
+        idx = positions[0, 0]
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, idx, 0))
+        rc = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(
+                cache["k_rope"].dtype), (0, idx, 0))
+        new_cache = {"ckv": cc, "k_rope": rc}
+        # absorbed: q_eff = q_nope @ W_uk  -> score against compressed cache
+        wuk = M.all_gather(p["w_uk"], axes.z, dim=1)
+        wuk = wuk.reshape(m.kv_lora_rank, nq_l, m.qk_nope_dim)
+        q_eff = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))  # (B,1,nq_l,rank)
+        S = cc.shape[1]
+        scores = (jnp.einsum("bthr,bsr->bths", q_eff,
+                             cc.astype(jnp.float32))
+                  + jnp.einsum("bthd,bsd->bths",
+                               q_rope.astype(jnp.float32),
+                               rc.astype(jnp.float32))) * scale
+        ok = jnp.arange(S) <= idx
+        scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bths,bsr->bthr", probs, cc.astype(jnp.float32))
+        wuv = M.all_gather(p["w_uv"], axes.z, dim=1)
+        wuv = wuv.reshape(m.kv_lora_rank, nq_l, m.v_dim)
+        out = jnp.einsum("bthr,rhd->bthd", ctx, wuv.astype(jnp.float32)
+                         ).astype(h.dtype)
+    else:
+        raise ValueError(mode)
+
+    o = PP.tp_matmul(out.reshape(B, T, nq_l * m.v_dim), p["wo"], axes,
+                     "y", "x")
+    return o, new_cache
+
+
+def mla_cache_spec(cfg, axes: M.MeshAxes, batch_global, seq, *,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    bspec = axes.pspec(axes.batch_axes(), None, None)
+    return {
+        "ckv": (jax.ShapeDtypeStruct((batch_global, seq, m.kv_lora_rank),
+                                     dtype), bspec),
+        "k_rope": (jax.ShapeDtypeStruct((batch_global, seq, m.qk_rope_dim),
+                                        dtype), bspec),
+    }

@@ -1,0 +1,132 @@
+"""Channel-parallel 2D convolution — the paper's §3 extension of
+Algorithm 1 to conv layers ("treating k and n as the number of input and
+output channels").
+
+A 3x3 conv is the contraction Y[p, Cout] = sum_k X_k[p, Cin] W[k, Cin,
+Cout] over the 9 shifted views X_k. The weight is stored (K*K, Cin, Cout)
+with Cin over the contraction axis and Cout over (out_axis, z) — the
+offset dim is NOT fused into Cin (a fused (9*Cin) row shard would change
+global layout meaning with G_x, the same trap as fused QKV). The local
+partial sums over all 9 offsets happen *before* the single all-reduce, so
+the collective volume matches the paper's per-layer model exactly (one AR
+of the output per conv).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+
+
+def _shifted_views(x, K: int, stride: int = 1):
+    """x: (B, H, W, C) -> list of K*K views (B, H', W', C), zero-padded."""
+    pad = K // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    B, Hp, Wp, C = xp.shape
+    H, W = x.shape[1], x.shape[2]
+    Ho, Wo = -(-H // stride), -(-W // stride)
+    views = []
+    for di in range(K):
+        for dj in range(K):
+            v = xp[:, di:di + H:stride, dj:dj + W:stride, :]
+            views.append(v)
+    return views, Ho, Wo
+
+
+def _conv_partial(x, w, K: int, stride: int):
+    """Local partial conv: sum_k view_k @ w[k]. x (B,H,W,Cin_l);
+    w (K*K, Cin_l, Cout_l)."""
+    views, Ho, Wo = _shifted_views(x, K, stride)
+    B = x.shape[0]
+    acc = None
+    for k, v in enumerate(views):
+        t = jax.lax.dot_general(
+            v.reshape(B * Ho * Wo, -1), w[k],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = t if acc is None else acc + t
+    return acc.reshape(B, Ho, Wo, w.shape[-1]).astype(x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def tp_conv(x, w, axes: M.MeshAxes, in_shard: Optional[str] = "x",
+            out_shard: Optional[str] = "y", stride: int = 1,
+            z_shard: bool = True):
+    """Channel-parallel KxK conv with the paper's collective schedule:
+    local partials over all offsets, one all-reduce over the contraction
+    axis; backward all-reduce over the output axis (Algorithm 1).
+    ``z_shard=False`` for tiny cout (e.g. the 3-channel output head)."""
+    wf = M.all_gather(w, axes.z, dim=2) if z_shard else w
+    y = _conv_partial(x, wf, int(math.isqrt(w.shape[0])), stride)
+    return M.psum(y, PP._logical(axes, in_shard))
+
+
+def _tpc_fwd(x, w, axes, in_shard, out_shard, stride, z_shard):
+    wf = M.all_gather(w, axes.z, dim=2) if z_shard else w
+    y = M.psum(_conv_partial(x, wf, int(math.isqrt(w.shape[0])), stride),
+               PP._logical(axes, in_shard))
+    return y, (x, w)
+
+
+def _tpc_bwd(axes, in_shard, out_shard, stride, z_shard, res, dy):
+    x, w = res
+    K = int(math.isqrt(w.shape[0]))
+    assert stride == 1, "stride>1 backward handled via explicit pooling"
+    wf = M.all_gather(w, axes.z, dim=2) if z_shard else w
+    # dX = sum_k shift_{-k}(dY) @ w[k]^T  (a correlation = conv with the
+    # spatially-flipped kernel), then AR over the output axis
+    w_t = jnp.flip(wf.reshape(K, K, *wf.shape[1:]), axis=(0, 1))
+    w_t = jnp.swapaxes(w_t.reshape(K * K, *wf.shape[1:]), 1, 2)
+    dx = M.psum(_conv_partial(dy, w_t, K, 1),
+                PP._logical(axes, out_shard)).astype(x.dtype)
+    # dW[k] = view_k(X)^T @ dY, reduce-scattered over z
+    views, Ho, Wo = _shifted_views(x, K, 1)
+    B = x.shape[0]
+    dyf = dy.reshape(B * Ho * Wo, -1)
+    dws = [jax.lax.dot_general(
+        v.reshape(B * Ho * Wo, -1), dyf, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) for v in views]
+    dw = jnp.stack(dws, axis=0)
+    if z_shard:
+        dw = M.psum_scatter(dw, axes.z, dim=2)
+    return dx, dw.astype(w.dtype)
+
+
+tp_conv.defvjp(_tpc_fwd, _tpc_bwd)
+
+
+def tp_conv_init(key, K: int, cin: int, cout: int, axes: M.MeshAxes, *,
+                 in_shard="x", out_shard="y", dtype=jnp.float32, stack=(),
+                 z_shard=True, abstract=False) -> Boxed:
+    out_names = M._names(PP._logical(axes, out_shard)) \
+        + (M._names(axes.z) if z_shard else ())
+    spec = P(*([None] * (len(stack) + 1)),
+             *axes.pspec(PP._logical(axes, in_shard),
+                         out_names if out_names else None))
+    shape = (*stack, K * K, cin, cout)
+    if abstract:
+        return Boxed(jax.ShapeDtypeStruct(shape, dtype), spec,
+                     z_reduced=z_shard)
+    s = 1.0 / math.sqrt(K * K * cin)
+    v = (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+    return Boxed(v, spec, z_reduced=z_shard)
+
+
+def group_norm_local(x, gamma, beta, n_groups_local: int, eps=1e-5):
+    """GroupNorm over channel groups that never straddle shards (the
+    caller aligns groups to the x-shard: G % G_x == 0 => fully local)."""
+    B, H, W, C = x.shape
+    g = x.reshape(B, H, W, n_groups_local, C // n_groups_local)
+    mu = jnp.mean(g.astype(jnp.float32), axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(g.astype(jnp.float32), axis=(1, 2, 4), keepdims=True)
+    gn = ((g - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (gn * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)

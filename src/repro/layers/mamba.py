@@ -1,0 +1,187 @@
+"""Mamba (S6) mixer under the 4D layout (used by jamba).
+
+The in/out projections are paper normal/transposed tp layers (that is where
+the FLOPs are); the selective scan itself is per-channel and therefore
+embarrassingly parallel over the y-sharded inner dim — exactly the class of
+layer the paper calls "trivial to parallelize". The scan is chunked
+(sequential over chunks, associative-scan within a chunk) to bound the
+(B, T, d, N) state-expansion working set; the Pallas kernel in
+repro.kernels.selective_scan mirrors the chunk body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+
+
+def _y_param(shape, axes, dtype, init_fn, stack=(), abstract=False):
+    """A per-inner-channel param sharded over y on its first dim."""
+    spec = P(*([None] * len(stack)), *axes.pspec(axes.y),
+             *([None] * (len(shape) - 1)))
+    full = (*stack, *shape)
+    if abstract:
+        return Boxed(jax.ShapeDtypeStruct(full, dtype), spec)
+    return Boxed(init_fn(full).astype(dtype), spec)
+
+
+def mamba_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
+               abstract=False):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 7)
+    p = {
+        # x-path and gate-path projections kept separate (mesh-invariant
+        # global layout; a fused 2*di column shard would not be)
+        "w_in": PP.tp_linear_init(ks[0], d, di, axes, dtype=dtype,
+                                  stack=stack, abstract=abstract),
+        "w_gate": PP.tp_linear_init(ks[5], d, di, axes, dtype=dtype,
+                                    stack=stack, abstract=abstract),
+        "w_x": PP.tp_linear_init(ks[1], di, dt_rank + 2 * mc.d_state, axes,
+                                 in_shard="y", out_shard=None, dtype=dtype,
+                                 stack=stack, abstract=abstract),
+        "w_dt": PP.tp_linear_init(ks[2], dt_rank, di, axes, in_shard=None,
+                                  out_shard="y", dtype=dtype, stack=stack,
+                                  abstract=abstract),
+        "w_out": PP.tp_linear_init(ks[3], di, d, axes, in_shard="y",
+                                   out_shard="x", dtype=dtype, stack=stack,
+                                   abstract=abstract),
+        "conv_w": _y_param((di, mc.d_conv), axes, dtype,
+                           lambda s: jax.random.normal(ks[6], s) * 0.1,
+                           stack, abstract),
+        "conv_b": _y_param((di,), axes, dtype, lambda s: jnp.zeros(s),
+                           stack, abstract),
+        "b_dt": _y_param((di,), axes, jnp.float32,
+                         lambda s: jnp.full(s, -4.6),  # softplus^-1(0.01)
+                         stack, abstract),
+        "A_log": _y_param((di, mc.d_state), axes, jnp.float32,
+                          lambda s: jnp.log(jnp.broadcast_to(
+                              jnp.arange(1, mc.d_state + 1, dtype=jnp.float32),
+                              s)), stack, abstract),
+        "D": _y_param((di,), axes, jnp.float32, lambda s: jnp.ones(s),
+                      stack, abstract),
+    }
+    return p
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B, T, d); w: (d, K)."""
+    K = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + x.shape[1], :] * w[:, k] for k in range(K))
+    return out + b
+
+
+def ssm_scan_chunked(x, dt, A, Bc, Cc, *, chunk: int = 128, s0=None):
+    """Selective scan s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t; y = C_t s_t.
+
+    x, dt: (B, T, d); A: (d, N); Bc, Cc: (B, T, N).
+    Returns (y (B, T, d), final_state (B, d, N)).
+    """
+    B, T, d = x.shape
+    N = A.shape[-1]
+    nc = max(T // chunk, 1)
+    ck = T // nc
+    xs = (x.reshape(B, nc, ck, d), dt.reshape(B, nc, ck, d),
+          Bc.reshape(B, nc, ck, N), Cc.reshape(B, nc, ck, N))
+    xs = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), xs)
+    s_init = jnp.zeros((B, d, N), jnp.float32) if s0 is None else s0
+
+    def body(s, inp):
+        xc, dtc, bc, cc = inp
+        dtf = dtc.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * A)                     # (B,ck,d,N)
+        dBx = (dtf * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[:, :, None, :]
+        pA, pb = jax.lax.associative_scan(
+            lambda a, b: (a[0] * b[0], a[1] * b[0] + b[1]),
+            (dA, dBx), axis=1)
+        states = pb + pA * s[:, None]                        # (B,ck,d,N)
+        y = jnp.einsum("btdn,btn->btd", states,
+                       cc.astype(jnp.float32))
+        return states[:, -1], y.astype(x.dtype)
+
+    s_fin, ys = jax.lax.scan(body, s_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)
+    return y, s_fin
+
+
+def mamba_apply(p, h, cfg, axes: M.MeshAxes, *, mode="train", state=None,
+                chunk: int = 128):
+    """h: (B, T, d/x) replicated over y -> (out, new_state).
+
+    state (decode): {"conv": (B, K-1, di_l), "ssm": (B, di_l, N)}."""
+    mc = cfg.mamba
+    d = cfg.d_model
+    di_l = mc.expand * d // axes.gy
+    B, T, _ = h.shape
+
+    xs = PP.tp_matmul(h, p["w_in"], axes, "x", "y")      # (B,T,di_l)
+    zgate = PP.tp_matmul(h, p["w_gate"], axes, "x", "y")
+
+    new_state = state
+    if mode in ("train", "prefill"):
+        xc = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc)
+        xdbc = PP.tp_matmul(xc, p["w_x"], axes, "y", None)
+        dt_rank = mc.dt_rank or -(-d // 16)
+        dt_low, bc, cc = jnp.split(xdbc, [dt_rank, dt_rank + mc.d_state],
+                                   axis=-1)
+        dt = jax.nn.softplus(
+            PP.tp_matmul(dt_low, p["w_dt"], axes, None, "y")
+            + p["b_dt"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"])
+        y, s_fin = ssm_scan_chunked(xc, dt, A, bc, cc, chunk=chunk)
+        if mode == "prefill":
+            new_state = {"conv": xs[:, -(mc.d_conv - 1):, :],
+                         "ssm": s_fin}
+    elif mode == "decode":
+        conv_st = jnp.concatenate([state["conv"], xs], axis=1)  # (B,K,di_l)
+        xc = jnp.einsum("bkd,dk->bd", conv_st, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None, :]                 # (B,1,di_l)
+        xdbc = PP.tp_matmul(xc, p["w_x"], axes, "y", None)
+        dt_rank = mc.dt_rank or -(-d // 16)
+        dt_low, bc, cc = jnp.split(xdbc, [dt_rank, dt_rank + mc.d_state],
+                                   axis=-1)
+        dt = jax.nn.softplus(
+            PP.tp_matmul(dt_low, p["w_dt"], axes, None, "y")
+            + p["b_dt"].astype(jnp.float32))             # (B,1,di_l)
+        dA = jnp.exp(dt[:, 0].astype(jnp.float32)[..., None]
+                     * (-jnp.exp(p["A_log"])))           # (B,di_l,N)
+        dBx = (dt[:, 0].astype(jnp.float32)
+               * xc[:, 0].astype(jnp.float32))[..., None] \
+            * bc[:, 0].astype(jnp.float32)[:, None, :]
+        s = state["ssm"] * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", s,
+                       cc[:, 0].astype(jnp.float32))[:, None, :]
+        y = y.astype(h.dtype)
+        new_state = {"conv": conv_st[:, 1:, :], "ssm": s}
+    else:
+        raise ValueError(mode)
+
+    y = y.astype(jnp.float32) + p["D"].astype(jnp.float32) \
+        * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(zgate.astype(jnp.float32))).astype(h.dtype)
+    out = PP.tp_matmul(y, p["w_out"], axes, "y", "x")
+    return out, new_state
+
+
+def mamba_state_spec(cfg, axes: M.MeshAxes, batch_global, *,
+                     dtype=jnp.bfloat16, seqshard: bool = False):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    bax = None if seqshard else axes.batch_axes()  # batch=1: replicate
+    bspec3 = axes.pspec(bax, None, axes.y)
+    bspec3n = axes.pspec(bax, axes.y, None)
+    return {
+        "conv": (jax.ShapeDtypeStruct((batch_global, mc.d_conv - 1, di),
+                                      dtype), bspec3),
+        "ssm": (jax.ShapeDtypeStruct((batch_global, di, mc.d_state),
+                                     jnp.float32), bspec3n),
+    }

@@ -1,0 +1,63 @@
+"""Feed-forward layers: gated (SiLU/GeLU) and squared-ReLU variants.
+
+The up projection is a paper "normal" layer (contract x, output over y) and
+the down projection a paper "transposed" layer (contract y, output over x) —
+the §4.1 alternation that keeps layer boundaries communication-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "squared_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, axes: M.MeshAxes, *,
+             gated: bool, bias: bool = False, dtype=jnp.bfloat16, stack=(),
+             abstract=False):
+    # gate and up are separate weights: a fused (2*d_ff) matrix column-
+    # sharded over y would change global layout meaning with G_y
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": PP.tp_linear_init(k1, d_model, d_ff, axes, dtype=dtype,
+                                stack=stack, abstract=abstract),
+        "wo": PP.tp_linear_init(k2, d_ff, d_model, axes, in_shard="y",
+                                out_shard="x", dtype=dtype, stack=stack,
+                                abstract=abstract),
+    }
+    if gated:
+        p["wg"] = PP.tp_linear_init(k3, d_model, d_ff, axes, dtype=dtype,
+                                    stack=stack, abstract=abstract)
+    if bias:
+        p["bi"] = PP.tp_bias_init(d_ff, axes, dtype=dtype, stack=stack,
+                                  abstract=abstract)
+        p["bo"] = PP.tp_bias_init(d_model, axes, out_shard="x", dtype=dtype,
+                                  stack=stack, abstract=abstract)
+    return p
+
+
+def mlp_apply(p, h, act: str, axes: M.MeshAxes, *, gated: bool):
+    u = PP.tp_matmul(h, p["wi"], axes, "x", "y")
+    if "bi" in p:
+        u = u + p["bi"]
+    if gated:
+        g = PP.tp_matmul(h, p["wg"], axes, "x", "y")
+        hidden = _act(act, g) * u
+    else:
+        hidden = _act(act, u)
+    o = PP.tp_matmul(hidden, p["wo"], axes, "y", "x")
+    if "bo" in p:
+        o = o + p["bo"]
+    return o

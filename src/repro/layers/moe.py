@@ -1,0 +1,149 @@
+"""Mixture-of-Experts under the 4D layout.
+
+Expert placement exploits the paper's activation layout: the residual
+stream is *replicated over y*, so sharding the expert bank over ``y`` makes
+dispatch communication-free within the tensor group — every y-rank already
+holds every token and simply computes its own E/G_y experts. The only
+collective the MoE layer adds over a dense MLP is the final combine
+all-reduce over ``y``, which *replaces* (at identical volume) the down
+projection's all-reduce — plus the tiny router all-reduce over ``x``.
+This is recorded in DESIGN.md as a consequence of the paper's layout, not
+an extra trick: under Megatron-style 1D TP the same MoE needs either
+expert all-to-alls or full activation gathers.
+
+Dispatch is capacity-based with gather/scatter indexing (O(T*E_local)
+bookkeeping memory, no (T, E, C) one-hot tensor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+from repro.layers.mlp import _act, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
+             abstract=False):
+    mc = cfg.moe
+    d, f = cfg.d_model, mc.d_expert
+    if mc.n_experts % axes.gy:
+        raise ValueError(f"{mc.n_experts} experts not divisible by "
+                         f"G_y={axes.gy}")
+    ks = jax.random.split(key, 4)
+    gated = cfg.act != "squared_relu"
+    up_n = 2 * f if gated else f
+    p = {
+        # router: contract x, replicated logits (E is tiny)
+        "w_router": PP.tp_linear_init(ks[0], d, mc.n_experts, axes,
+                                      in_shard="x", out_shard=None,
+                                      dtype=jnp.float32, stack=stack,
+                                      abstract=abstract),
+        "w_up": PP.tp_expert_init(ks[1], mc.n_experts, d, up_n, axes,
+                                  in_shard="x", out_shard=None, dtype=dtype,
+                                  stack=stack, abstract=abstract),
+        "w_down": PP.tp_expert_init(ks[2], mc.n_experts, f, d, axes,
+                                    in_shard=None, out_shard="x",
+                                    dtype=dtype, stack=stack,
+                                    abstract=abstract),
+    }
+    if mc.n_shared:
+        p["shared"] = mlp_init(ks[3], d, mc.n_shared * f, cfg.act, axes,
+                               gated=gated, dtype=dtype, stack=stack,
+                               abstract=abstract)
+    return p
+
+
+def _topk_gates(logits, mc):
+    """Router scores -> (gates, indices). logits (T, E) fp32, replicated."""
+    if mc.score_fn == "sigmoid":          # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        vals, idx = jax.lax.top_k(scores, mc.top_k)
+        gates = vals / (jnp.sum(vals, -1, keepdims=True) + 1e-20)
+        gates = gates * mc.routed_scale
+    else:                                  # softmax-topk (switch/dsv2 style)
+        vals, idx = jax.lax.top_k(logits, mc.top_k)
+        gates = jax.nn.softmax(vals, axis=-1)
+    return gates, idx
+
+
+def _aux_losses(logits, idx, mc):
+    """Switch-style load-balance loss + router z-loss (replicated values)."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)                       # mean router prob
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (T, k, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=1), axis=0) / mc.top_k  # load frac
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return mc.aux_loss_coef * lb + mc.z_loss_coef * z
+
+
+def moe_apply(p, h, cfg, axes: M.MeshAxes):
+    """h: (B, T, d/x) replicated over y. Returns (out, aux_loss)."""
+    mc = cfg.moe
+    B, T, dx = h.shape
+    n_tok = B * T
+    e_local = mc.n_experts // axes.gy
+    e_start = M.axis_index(axes.y) * e_local
+    gated = cfg.act != "squared_relu"
+
+    hf = h.reshape(n_tok, dx)
+    logits = PP.tp_matmul(hf, p["w_router"].astype(hf.dtype), axes,
+                          "x", None).astype(jnp.float32)
+    gates, idx = _topk_gates(logits, mc)               # (n_tok, k)
+    aux = _aux_losses(logits, idx, mc)
+
+    capacity = max(int(mc.capacity_factor * n_tok * mc.top_k
+                       / mc.n_experts), 4)
+
+    # ---- gather-based dispatch to the y-local experts ------------------
+    local = idx - e_start                              # (n_tok, k)
+    ok = (local >= 0) & (local < e_local)
+    eflat = jnp.where(ok, local, e_local)              # e_local = "drop"
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(eflat.reshape(-1), e_local + 1, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1               # (n_tok*k, e+1)
+    pos = jnp.take_along_axis(pos, eflat.reshape(-1, 1), axis=1)[:, 0]
+    fits = (pos < capacity) & ok.reshape(-1)
+    slot = jnp.where(fits, eflat.reshape(-1) * capacity + pos,
+                     e_local * capacity)
+    # token id owning each (expert, cap) slot
+    tok_ids = jnp.tile(jnp.arange(n_tok)[:, None],
+                       (1, mc.top_k)).reshape(-1)
+    owner = jnp.zeros(e_local * capacity + 1, jnp.int32).at[slot].set(
+        tok_ids, mode="drop")[:-1]
+    filled = jnp.zeros(e_local * capacity + 1, jnp.bool_).at[slot].set(
+        True, mode="drop")[:-1]
+    gate_of_slot = jnp.zeros(e_local * capacity + 1, jnp.float32).at[
+        slot].set(gates.reshape(-1), mode="drop")[:-1]
+
+    xe = jnp.take(hf, owner, axis=0)                   # (e*cap, d/x)
+    xe = jnp.where(filled[:, None], xe, 0)
+    xe = xe.reshape(e_local, capacity, dx)
+
+    # ---- expert FFN (4D tp inside each expert) -------------------------
+    u = PP.tp_batched_matmul(xe, p["w_up"], axes, "x", None)
+    if gated:
+        g, u2 = jnp.split(u, 2, axis=-1)
+        hidden = _act(cfg.act, g) * u2
+    else:
+        hidden = _act(cfg.act, u)
+    out_e = PP.tp_batched_matmul(hidden, p["w_down"], axes, None, "x")
+    out_e = out_e.reshape(e_local * capacity, dx)
+    out_e = out_e * gate_of_slot[:, None].astype(out_e.dtype)
+
+    # ---- combine: scatter-add back to tokens, all-reduce over y --------
+    combined = jnp.zeros((n_tok, dx), out_e.dtype).at[owner].add(
+        jnp.where(filled[:, None], out_e, 0))
+    combined = PP.ar_bwd_identity(combined, axes.y)
+    out = combined.reshape(B, T, dx)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], h, cfg.act, axes, gated=gated)
+    return out, aux

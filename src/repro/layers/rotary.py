@@ -1,0 +1,40 @@
+"""Rotary position embeddings (full and partial-rotary variants)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0):
+    """Inverse frequencies for the rotary fraction of the head dim."""
+    rot = int(head_dim * rotary_pct)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """x: (B, T, n_heads, head_dim); positions: (B, T) int32."""
+    inv, rot = rope_freqs(x.shape[-1], theta, rotary_pct)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, T, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+def apply_rope_interleaved_neox(x, positions, theta: float):
+    """NeoX-style half-rotation (used by MLA's rope sub-dim)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)

@@ -1,0 +1,339 @@
+"""xLSTM blocks (mLSTM and sLSTM) under the 4D layout.
+
+Projections in/out of the cells are paper normal/transposed tp layers; the
+cells themselves are per-head (heads sharded over ``y``) with exponential
+gating and the xLSTM paper's max-stabilizer. The mLSTM matrix-memory
+recurrence and the sLSTM scalar-memory recurrence are sequential scans over
+time (per-channel / per-head local — the "embarrassingly parallel" class in
+the paper's taxonomy); decode is a single-step state update.
+
+Block shapes follow the xLSTM paper: mLSTM block = up-proj x2 (pf=2), causal
+conv4, per-head q/k/v, cell, learnable skip, gated output, down-proj;
+sLSTM block = conv4 on the i/f path, 4-gate cell with per-head recurrent
+matrices, then a pf=4/3 gated MLP.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+from repro.layers.mamba import causal_conv1d
+
+
+def _y_param(shape, axes, dtype, init_fn, stack=(), abstract=False):
+    spec = P(*([None] * len(stack)), *axes.pspec(axes.y),
+             *([None] * (len(shape) - 1)))
+    full = (*stack, *shape)
+    if abstract:
+        return Boxed(jax.ShapeDtypeStruct(full, dtype), spec)
+    return Boxed(init_fn(full).astype(dtype), spec)
+
+
+def slstm_ff_dim(cfg) -> int:
+    """pf=4/3 MLP width rounded up to a shardable multiple of 64."""
+    return -(-int(cfg.xlstm.proj_factor_slstm * cfg.d_model) // 64) * 64
+
+
+# ---------------------------------------------------------------------- #
+# mLSTM
+# ---------------------------------------------------------------------- #
+
+def mlstm_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
+               abstract=False):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(xc.proj_factor_mlstm * d)          # inner dim (pf = 2)
+    nh = cfg.n_heads
+    dh = di // nh
+    ks = jax.random.split(key, 9)
+    norm = lambda k, s: jax.random.normal(k, s) / math.sqrt(s[-1])
+    return {
+        # main and gate up-projections kept separate (mesh-invariant)
+        "w_up": PP.tp_linear_init(ks[0], d, di, axes, dtype=dtype,
+                                  stack=stack, abstract=abstract),
+        "w_upg": PP.tp_linear_init(ks[8], d, di, axes, dtype=dtype,
+                                   stack=stack, abstract=abstract),
+        "conv_w": _y_param((di, xc.conv_kernel), axes, dtype,
+                           lambda s: jax.random.normal(ks[1], s) * 0.1,
+                           stack, abstract),
+        "conv_b": _y_param((di,), axes, dtype, jnp.zeros, stack, abstract),
+        # per-head q/k/v over the conv path (v from the pre-conv path)
+        "w_q": _y_param((nh, dh, dh), axes, dtype,
+                        lambda s: norm(ks[2], s), stack, abstract),
+        "w_k": _y_param((nh, dh, dh), axes, dtype,
+                        lambda s: norm(ks[3], s), stack, abstract),
+        "w_v": _y_param((nh, dh, dh), axes, dtype,
+                        lambda s: norm(ks[4], s), stack, abstract),
+        # i/f gates: full contraction over the y-sharded inner dim
+        "w_if": PP.tp_linear_init(ks[5], di, 2 * nh, axes, in_shard="y",
+                                  out_shard=None, dtype=jnp.float32,
+                                  stack=stack, abstract=abstract),
+        "b_if": Boxed(jax.ShapeDtypeStruct((*stack, 2 * nh), jnp.float32)
+                      if abstract else jnp.zeros((*stack, 2 * nh)),
+                      P(*([None] * (len(stack) + 1)))),
+        "skip": _y_param((di,), axes, dtype, jnp.ones, stack, abstract),
+        "gn": _y_param((di,), axes, dtype, jnp.ones, stack, abstract),
+        "w_down": PP.tp_linear_init(ks[6], di, d, axes, in_shard="y",
+                                    out_shard="x", dtype=dtype, stack=stack,
+                                    abstract=abstract),
+    }
+
+
+def _mlstm_cell_step(carry, inp):
+    """One step of the stabilized mLSTM recurrence (all per-head local).
+
+    carry: C (B,nh,dk,dv), n (B,nh,dk), m (B,nh)
+    inp: q,k,v (B,nh,dk|dv), i_raw,f_raw (B,nh)
+    """
+    C, n, m, = carry
+    q, k, v, ir, fr = inp
+    logf = jax.nn.log_sigmoid(fr)
+    m_new = jnp.maximum(logf + m, ir)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(ir - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(q, k, v, ir, fr, state):
+    """q,k,v: (B,T,nh,dh) fp32; ir,fr: (B,T,nh). state: (C,n,m)."""
+    xs = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), (q, k, v, ir, fr))
+    state, hs = jax.lax.scan(_mlstm_cell_step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_state_init(batch, nh_local, dh, dtype=jnp.float32):
+    return (jnp.zeros((batch, nh_local, dh, dh), dtype),
+            jnp.zeros((batch, nh_local, dh), dtype),
+            jnp.full((batch, nh_local), -1e30, dtype))
+
+
+def mlstm_apply(p, h, cfg, axes: M.MeshAxes, *, mode="train", state=None):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(xc.proj_factor_mlstm * d)
+    nh_l = cfg.n_heads // axes.gy
+    dh = di // cfg.n_heads
+    B, T, _ = h.shape
+
+    main = PP.tp_matmul(h, p["w_up"], axes, "x", "y")   # (B,T,di_l)
+    gate = PP.tp_matmul(h, p["w_upg"], axes, "x", "y")
+
+    if mode == "decode":
+        conv_in = jnp.concatenate([state["conv"], main], axis=1)
+        xconv = jnp.einsum("bkd,dk->bd", conv_in, p["conv_w"]) \
+            + p["conv_b"]
+        xconv = jax.nn.silu(xconv)[:, None, :]
+        new_conv = conv_in[:, 1:, :]
+    else:
+        xconv = jax.nn.silu(causal_conv1d(main, p["conv_w"], p["conv_b"]))
+        new_conv = main[:, -(xc.conv_kernel - 1):, :]
+
+    def heads(t):
+        return t.reshape(B, -1, nh_l, dh)
+    q = jnp.einsum("bthd,hde->bthe", heads(xconv), p["w_q"])
+    k = jnp.einsum("bthd,hde->bthe", heads(xconv), p["w_k"]) / math.sqrt(dh)
+    v = jnp.einsum("bthd,hde->bthe", heads(main), p["w_v"])
+    iff = PP.tp_matmul(xconv, p["w_if"].astype(xconv.dtype), axes, "y",
+                       None).astype(jnp.float32) + p["b_if"]
+    i_full, f_full = jnp.split(iff, 2, axis=-1)          # (B,T,nh) global nh
+    hi = M.axis_index(axes.y) * nh_l
+    ir = jax.lax.dynamic_slice_in_dim(i_full, hi, nh_l, axis=-1)
+    fr = jax.lax.dynamic_slice_in_dim(f_full, hi, nh_l, axis=-1)
+
+    cell_state = (state["C"], state["n"], state["m"]) if mode == "decode" \
+        else mlstm_state_init(B, nh_l, dh)
+    hs, (C, n, m) = _mlstm_scan(q.astype(jnp.float32),
+                                k.astype(jnp.float32),
+                                v.astype(jnp.float32), ir, fr, cell_state)
+    hs = hs.reshape(B, -1, nh_l * dh)
+
+    # per-head group-norm (local heads), learnable skip, output gate
+    hg = hs.reshape(B, -1, nh_l, dh)
+    mu = jnp.mean(hg, axis=-1, keepdims=True)
+    var = jnp.var(hg, axis=-1, keepdims=True)
+    hg = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, -1, nh_l * dh)
+    out = hg * p["gn"].astype(jnp.float32) \
+        + p["skip"].astype(jnp.float32) * xconv.astype(jnp.float32)
+    out = (out * jax.nn.silu(gate.astype(jnp.float32))).astype(h.dtype)
+    o = PP.tp_matmul(out, p["w_down"], axes, "y", "x")
+    new_state = {"conv": new_conv, "C": C, "n": n, "m": m}
+    return o, new_state
+
+
+# ---------------------------------------------------------------------- #
+# sLSTM
+# ---------------------------------------------------------------------- #
+
+def slstm_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
+               abstract=False):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dff = slstm_ff_dim(cfg)
+    ks = jax.random.split(key, 6)
+    norm = lambda k, s: jax.random.normal(k, s) / math.sqrt(s[-1])
+    return {
+        "conv_w": _y_param((d, xc.conv_kernel), axes, dtype,
+                           lambda s: jax.random.normal(ks[0], s) * 0.1,
+                           stack, abstract),
+        "conv_b": _y_param((d,), axes, dtype, jnp.zeros, stack, abstract),
+        # W: x -> 4 gates, one weight per gate (mesh-invariant layout)
+        "w_gz": PP.tp_linear_init(jax.random.fold_in(ks[1], 0), d, d, axes,
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract),
+        "w_gi": PP.tp_linear_init(jax.random.fold_in(ks[1], 1), d, d, axes,
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract),
+        "w_gf": PP.tp_linear_init(jax.random.fold_in(ks[1], 2), d, d, axes,
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract),
+        "w_go": PP.tp_linear_init(jax.random.fold_in(ks[1], 3), d, d, axes,
+                                  dtype=dtype, stack=stack,
+                                  abstract=abstract),
+        # per-head recurrent matrices h_{t-1} -> 4 gates
+        "r_gates": _y_param((nh, dh, 4 * dh), axes, dtype,
+                            lambda s: norm(ks[2], s), stack, abstract),
+        "b_gates": _y_param((d, 4), axes, jnp.float32,
+                            lambda s: jnp.zeros(s), stack, abstract),
+        "gn": _y_param((d,), axes, dtype, jnp.ones, stack, abstract),
+        "w_o": PP.tp_linear_init(ks[3], d, d, axes, in_shard="y",
+                                 out_shard="x", dtype=dtype, stack=stack,
+                                 abstract=abstract),
+        "w_up": PP.tp_linear_init(ks[4], d, 2 * dff, axes, dtype=dtype,
+                                  stack=stack, abstract=abstract),
+        "w_down": PP.tp_linear_init(ks[5], dff, d, axes, in_shard="y",
+                                    out_shard="x", dtype=dtype, stack=stack,
+                                    abstract=abstract),
+    }
+
+
+def _slstm_cell_step(r_gates, carry, wx):
+    """carry: c, n, hprev, m — each (B, nh, dh) / m (B, nh).
+    wx: the W x_t + b part, (B, nh, dh, 4)."""
+    c, n, hprev, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", hprev, r_gates)
+    rec = rec.reshape(*hprev.shape[:2], -1, 4)
+    zt, it, ft, ot = [wx[..., j] + rec[..., j] for j in range(4)]
+    # per-head scalar stabilizer (max over the head's channels)
+    m_new = jnp.maximum(jnp.max(ft, -1) + m, jnp.max(it, -1))
+    ip = jnp.exp(it - m_new[..., None])
+    fp = jnp.exp(ft + (m - m_new)[..., None])
+    c = fp * c + ip * jnp.tanh(zt)
+    n = fp * n + ip
+    hnew = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return (c, n, hnew, m_new), hnew
+
+
+def slstm_state_init(batch, nh_local, dh, dtype=jnp.float32):
+    z = jnp.zeros((batch, nh_local, dh), dtype)
+    return {"c": z, "n": z + 1e-6, "h": z,
+            "m": jnp.zeros((batch, nh_local), dtype)}
+
+
+def slstm_apply(p, h, cfg, axes: M.MeshAxes, *, mode="train", state=None):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    nh_l = cfg.n_heads // axes.gy
+    dh = d // cfg.n_heads
+    B, T, _ = h.shape
+
+    gz = PP.tp_matmul(h, p["w_gz"], axes, "x", "y")      # (B,T,d_l)
+    gi = PP.tp_matmul(h, p["w_gi"], axes, "x", "y")
+    gf = PP.tp_matmul(h, p["w_gf"], axes, "x", "y")
+    go = PP.tp_matmul(h, p["w_go"], axes, "x", "y")
+    wx = jnp.stack([gz, gi, gf, go], axis=-1)
+    wx = wx.reshape(B, T, nh_l, dh, 4).astype(jnp.float32)
+    # conv4+silu on the i-gate pre-activations (time-local mixing)
+    iwx = wx[..., 1]
+    flat = lambda t: t.reshape(B, T, nh_l * dh)
+    if mode == "decode":
+        cin = jnp.concatenate([state["conv"], flat(iwx).astype(h.dtype)],
+                              axis=1)
+        iconv = jax.nn.silu(jnp.einsum("bkd,dk->bd", cin, p["conv_w"])
+                            + p["conv_b"])[:, None]
+        new_conv = cin[:, 1:, :]
+        iwx = iconv.reshape(B, 1, nh_l, dh).astype(jnp.float32)
+    else:
+        iconv = jax.nn.silu(causal_conv1d(flat(iwx).astype(h.dtype),
+                                          p["conv_w"], p["conv_b"]))
+        new_conv = flat(iwx).astype(h.dtype)[:, -(xc.conv_kernel - 1):, :]
+        iwx = iconv.reshape(B, T, nh_l, dh).astype(jnp.float32)
+    wx = jnp.stack([wx[..., 0], iwx, wx[..., 2], wx[..., 3]], axis=-1)
+    # b_gates is already y-sharded: local (d/gy, 4) == (nh_l*dh, 4)
+    wx = wx + p["b_gates"].reshape(nh_l, dh, 4)[None, None]
+
+    cell0 = state["cell"] if mode == "decode" \
+        else slstm_state_init(B, nh_l, dh)
+    carry0 = (cell0["c"], cell0["n"], cell0["h"], cell0["m"])
+    step = lambda c, x: _slstm_cell_step(
+        p["r_gates"].reshape(nh_l, dh, 4 * dh).astype(jnp.float32), c, x)
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                          # (B,T,nh_l,dh)
+
+    mu = jnp.mean(hs, -1, keepdims=True)
+    var = jnp.var(hs, -1, keepdims=True)
+    hs = ((hs - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, T, nh_l * dh)
+    hs = (hs * p["gn"].astype(jnp.float32)).astype(h.dtype)
+    o = PP.tp_matmul(hs, p["w_o"], axes, "y", "x")
+
+    # post-cell gated MLP (pf = 4/3)
+    u = PP.tp_matmul(o, p["w_up"], axes, "x", "y")
+    g, u2 = jnp.split(u, 2, axis=-1)
+    o2 = PP.tp_matmul(jax.nn.gelu(g) * u2, p["w_down"], axes, "y", "x")
+    out = o + o2
+    new_state = {"conv": new_conv,
+                 "cell": {"c": carry[0], "n": carry[1], "h": carry[2],
+                          "m": carry[3]}}
+    return out, new_state
+
+
+def xlstm_state_spec(cfg, axes: M.MeshAxes, batch_global, kind: str, *,
+                     dtype=jnp.float32, seqshard: bool = False):
+    xc = cfg.xlstm
+    nh = cfg.n_heads
+    d = cfg.d_model
+    bspec = None if seqshard else axes.batch_axes()
+    if kind == "mlstm":
+        di = int(xc.proj_factor_mlstm * d)
+        dh = di // nh
+        return {
+            "conv": (jax.ShapeDtypeStruct(
+                (batch_global, xc.conv_kernel - 1, di), jnp.bfloat16),
+                axes.pspec(bspec, None, axes.y)),
+            "C": (jax.ShapeDtypeStruct((batch_global, nh, dh, dh), dtype),
+                  axes.pspec(bspec, axes.y, None, None)),
+            "n": (jax.ShapeDtypeStruct((batch_global, nh, dh), dtype),
+                  axes.pspec(bspec, axes.y, None)),
+            "m": (jax.ShapeDtypeStruct((batch_global, nh), dtype),
+                  axes.pspec(bspec, axes.y)),
+        }
+    dh = d // nh
+    return {
+        "conv": (jax.ShapeDtypeStruct((batch_global, xc.conv_kernel - 1, d),
+                                      jnp.bfloat16),
+                 axes.pspec(bspec, None, axes.y)),
+        "cell": {
+            "c": (jax.ShapeDtypeStruct((batch_global, nh, dh), dtype),
+                  axes.pspec(bspec, axes.y, None)),
+            "n": (jax.ShapeDtypeStruct((batch_global, nh, dh), dtype),
+                  axes.pspec(bspec, axes.y, None)),
+            "h": (jax.ShapeDtypeStruct((batch_global, nh, dh), dtype),
+                  axes.pspec(bspec, axes.y, None)),
+            "m": (jax.ShapeDtypeStruct((batch_global, nh), dtype),
+                  axes.pspec(bspec, axes.y)),
+        },
+    }

@@ -1,0 +1,1 @@
+"""Model assemblers (decoder-only, enc-dec) + the config system."""

@@ -1,0 +1,201 @@
+"""Channel-parallel U-Net (the paper's own primary evaluation model,
+Nichol & Dhariwal-style) under the 4D layout, trained as a DDPM noise
+predictor — the paper's §6.1 task.
+
+Structure (compact but faithful): conv stem -> L levels of [res, res,
+downsample] -> middle res -> L levels of [upsample, res(+skip), res] ->
+GN -> out conv. Each residual block is the paper's normal/transposed conv
+pair (conv1: contract x -> y; conv2: contract y -> x) so layer boundaries
+cost zero communication, exactly as in the transformer case; the timestep
+embedding enters between them (projected to the y-sharded intermediate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh as M
+from repro.core import parallel as PP
+from repro.core.partition import Boxed
+from repro.layers.conv import group_norm_local, tp_conv, tp_conv_init
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str = "unet-paper-280m"
+    channels: int = 384          # base width (paper 280M validator scale)
+    levels: int = 3
+    res_blocks: int = 2
+    image_size: int = 32
+    in_channels: int = 3
+    temb_dim: int = 512
+    groups: int = 32
+    source: str = "paper §6.1 / Nichol & Dhariwal [arXiv:2102.09672]"
+
+    def reduced(self) -> "UNetConfig":
+        return dataclasses.replace(self, name=self.name + "-smoke",
+                                   channels=64, levels=2, res_blocks=1,
+                                   image_size=16, groups=8)
+
+
+def _gn_params(c, axes, dtype, abstract, shard="x"):
+    spec = axes.pspec(axes.x if shard == "x" else axes.y)
+    if abstract:
+        z = jax.ShapeDtypeStruct((c,), dtype)
+        return {"g": Boxed(z, spec), "b": Boxed(z, spec)}
+    return {"g": Boxed(jnp.ones((c,), dtype), spec),
+            "b": Boxed(jnp.zeros((c,), dtype), spec)}
+
+
+def _res_block_init(key, cin, cout, cfg, axes, dtype, abstract):
+    ks = jax.random.split(key, 4)
+    p = {
+        "gn1": _gn_params(cin, axes, dtype, abstract),
+        "conv1": tp_conv_init(ks[0], 3, cin, cout, axes, in_shard="x",
+                              out_shard="y", dtype=dtype,
+                              abstract=abstract),
+        # timestep projection lands on the y-sharded intermediate
+        "temb": PP.tp_linear_init(ks[1], cfg.temb_dim, cout, axes,
+                                  in_shard=None, out_shard="y",
+                                  dtype=dtype, abstract=abstract),
+        "gn2": _gn_params(cout, axes, dtype, abstract, shard="y"),
+        "conv2": tp_conv_init(ks[2], 3, cout, cout, axes, in_shard="y",
+                              out_shard="x", dtype=dtype,
+                              abstract=abstract),
+    }
+    if cin != cout:
+        # x -> full (psum over x), then slice back to the x shard
+        p["skip"] = tp_conv_init(ks[3], 1, cin, cout, axes, in_shard="x",
+                                 out_shard=None, dtype=dtype,
+                                 abstract=abstract)
+    return p
+
+
+def _gn(x, prm, cfg, axes, c_shard: str):
+    # groups aligned to the shard of the channel dim (see conv.py)
+    g_total = cfg.groups
+    gsz = axes.gx if c_shard == "x" else axes.gy
+    n_local = max(g_total // max(gsz, 1), 1)
+    return group_norm_local(x, prm["g"], prm["b"], n_local)
+
+
+def _res_block(p, x, temb, cfg, axes):
+    h = _gn(x, p["gn1"], cfg, axes, "x")
+    h = tp_conv(jax.nn.silu(h), p["conv1"], axes, "x", "y")
+    h = h + PP.tp_matmul(jax.nn.silu(temb), p["temb"], axes, None, "y"
+                         )[:, None, None, :]
+    h = _gn(h, p["gn2"], cfg, axes, "y")
+    h = tp_conv(jax.nn.silu(h), p["conv2"], axes, "y", "x")
+    if "skip" in p:
+        x = PP.to_x_shard(tp_conv(x, p["skip"], axes, "x", None), axes)
+    return x + h
+
+
+def unet_init(key, cfg: UNetConfig, axes: M.MeshAxes, *,
+              dtype=jnp.float32, abstract=False) -> Dict[str, Any]:
+    C = cfg.channels
+    ks = iter(jax.random.split(key, 64))
+    p: Dict[str, Any] = {
+        "stem": tp_conv_init(next(ks), 3, cfg.in_channels, C, axes,
+                             in_shard=None, out_shard="x", dtype=dtype,
+                             abstract=abstract),
+        "temb1": PP.tp_linear_init(next(ks), cfg.temb_dim, cfg.temb_dim,
+                                   axes, in_shard=None, out_shard=None,
+                                   dtype=dtype, abstract=abstract),
+        "temb2": PP.tp_linear_init(next(ks), cfg.temb_dim, cfg.temb_dim,
+                                   axes, in_shard=None, out_shard=None,
+                                   dtype=dtype, abstract=abstract),
+        "out_gn": _gn_params(C, axes, dtype, abstract),
+        "out": tp_conv_init(next(ks), 3, C, cfg.in_channels, axes,
+                            in_shard="x", out_shard=None, dtype=dtype,
+                            z_shard=False, abstract=abstract),
+    }
+    down, up = [], []
+    widths = [C * (2 ** i) for i in range(cfg.levels)]
+    cin = C
+    for lv, w in enumerate(widths):
+        blocks = []
+        for b in range(cfg.res_blocks):
+            blocks.append(_res_block_init(next(ks), cin, w, cfg, axes,
+                                          dtype, abstract))
+            cin = w
+        down.append({"blocks": dict(enumerate_map(blocks))})
+    p["mid"] = _res_block_init(next(ks), cin, cin, cfg, axes, dtype,
+                               abstract)
+    for lv, w in reversed(list(enumerate(widths))):
+        blocks = []
+        for b in range(cfg.res_blocks):
+            # skip concat halves handled by addition (compact variant)
+            blocks.append(_res_block_init(next(ks), cin + 0, w, cfg, axes,
+                                          dtype, abstract))
+            cin = w
+        up.append({"blocks": dict(enumerate_map(blocks))})
+    p["down"] = dict(enumerate_map(down))
+    p["up"] = dict(enumerate_map(up))
+    return p
+
+
+def enumerate_map(items):
+    return ((f"b{i}", v) for i, v in enumerate(items))
+
+
+def _timestep_embedding(t, dim):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _pool2(x):
+    B, H, W, C = x.shape
+    return x.reshape(B, H // 2, 2, W // 2, 2, C).mean(axis=(2, 4))
+
+
+def _up2(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def unet_apply(p, cfg: UNetConfig, axes: M.MeshAxes, x, t):
+    """x: (B, H, W, Cin) full channels (small, replicated); t: (B,)."""
+    temb = _timestep_embedding(t, cfg.temb_dim)
+    temb = PP.tp_matmul(jax.nn.silu(
+        PP.tp_matmul(temb, p["temb1"], axes, None, None)),
+        p["temb2"], axes, None, None)
+    h = tp_conv(x, p["stem"], axes, None, "x")
+    skips = []
+    for lv in range(cfg.levels):
+        for b in range(cfg.res_blocks):
+            h = _res_block(p["down"][f"b{lv}"]["blocks"][f"b{b}"], h,
+                           temb, cfg, axes)
+        skips.append(h)
+        if lv < cfg.levels - 1:
+            h = _pool2(h)
+    h = _res_block(p["mid"], h, temb, cfg, axes)
+    for i, lv in enumerate(reversed(range(cfg.levels))):
+        if i > 0:
+            h = _up2(h)
+        for b in range(cfg.res_blocks):
+            h = _res_block(p["up"][f"b{i}"]["blocks"][f"b{b}"], h, temb,
+                           cfg, axes)
+            if b == 0:
+                h = h + skips[lv]  # additive skip (compact variant)
+    h = _gn(h, p["out_gn"], cfg, axes, "x")
+    return tp_conv(jax.nn.silu(h), p["out"], axes, "x", None, 1, False)
+
+
+def ddpm_loss(p, cfg: UNetConfig, axes: M.MeshAxes, images, t, noise):
+    """DDPM noise-prediction MSE (paper §6.1's U-Net training task).
+    images/noise: (B, H, W, C); t: (B,) in [0, 1000)."""
+    abar = jnp.cos(0.5 * jnp.pi * t.astype(jnp.float32) / 1000) ** 2
+    xt = (jnp.sqrt(abar)[:, None, None, None] * images
+          + jnp.sqrt(1 - abar)[:, None, None, None] * noise)
+    pred = unet_apply(p, cfg, axes, xt.astype(images.dtype), t)
+    se = jnp.sum((pred.astype(jnp.float32) - noise) ** 2)
+    total = PP.ar_bwd_identity(se, axes.batch_axes())
+    n = images.size * axes.batch_shards
+    return total / n

@@ -1,0 +1,2 @@
+"""Optimizers (mixed-precision AdamW with 4D-sharded state)."""
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state

@@ -1,0 +1,140 @@
+"""Mixed-precision AdamW for the 4D layout.
+
+Paper setup (§6.1): mixed precision + AdamW. Parameters live in bf16,
+sharded by the 4D layout; master weights and Adam moments are fp32 with the
+*same* PartitionSpec as the parameter — so tp-weight optimizer state is
+sharded over (x, y, z): the depth axis ``z`` cuts optimizer memory by
+1/G_z, which is the 4D paper's memory story (a ZeRO-1-like win realized
+through the tensor layout itself rather than a separate mechanism —
+recorded in DESIGN.md §7).
+
+Gradients arrive at ``apply_updates`` already reduced over ``data`` (and
+``z`` where required) by the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mesh as M
+from repro.core.partition import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+# ---------------------------------------------------------------------- #
+# state
+# ---------------------------------------------------------------------- #
+
+def init_state(params, *, abstract: bool = False):
+    """m / v / fp32 master per leaf, same shape & sharding as the leaf."""
+    def one(p):
+        if abstract or isinstance(p, jax.ShapeDtypeStruct):
+            z = jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            return {"m": z, "v": z, "master": z}
+        # copy=True: with fp32 params astype would alias the param buffer,
+        # which breaks donation in the jitted step
+        f32 = jnp.array(p, dtype=jnp.float32, copy=True)
+        return {"m": jnp.zeros_like(f32), "v": jnp.zeros_like(f32),
+                "master": f32}
+    return {"opt": jax.tree.map(one, params),
+            "step": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                     else jnp.zeros((), jnp.int32))}
+
+
+def state_pspecs(param_pspecs):
+    """PartitionSpec tree for the state (mirrors the params)."""
+    from jax.sharding import PartitionSpec as P
+    return {"opt": jax.tree.map(lambda s: {"m": s, "v": s, "master": s},
+                                param_pspecs,
+                                is_leaf=lambda x: isinstance(
+                                    x, jax.sharding.PartitionSpec)),
+            "step": P()}
+
+
+# ---------------------------------------------------------------------- #
+# update
+# ---------------------------------------------------------------------- #
+
+def _no_decay(path) -> bool:
+    keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    s = "/".join(str(k) for k in keys)
+    for tag in ("norm", "gn", "bias", "b_if", "b_gates", "b_dt", "bqkv",
+                "bo", "bi", "bq", "skip", "conv_b", "A_log", "D", "pos"):
+        if tag in s:
+            return True
+    return False
+
+
+def global_grad_norm(grads, specs, axes: M.MeshAxes):
+    """L2 norm of the *global* gradient: per-leaf local sum of squares is
+    psum'd over exactly the mesh axes the leaf is sharded over."""
+    gl = jax.tree.leaves(grads)
+    sl = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+    total = jnp.zeros((), jnp.float32)
+    for g, s in zip(gl, sl):
+        loc = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        names = tuple(n for entry in s.spec if entry is not None
+                      for n in (entry if isinstance(entry, tuple)
+                                else (entry,)))
+        total = total + (M.psum(loc, names) if names else loc)
+    return jnp.sqrt(total)
+
+
+def apply_updates(params, grads, state, specs, axes: M.MeshAxes,
+                  cfg: AdamWConfig):
+    """One AdamW step on local shards (grads pre-reduced over data/z).
+
+    Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    lr = lr_at(cfg, step)
+    gnorm = global_grad_norm(grads, specs, axes)
+    scale = (jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+             if cfg.grad_clip else jnp.float32(1.0))
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(state["opt"])
+    t = step.astype(jnp.float32) + 1
+
+    new_p, new_s = [], []
+    for (path, p), g, st in zip(flat_p, flat_g, flat_s):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * st["m"] + (1 - cfg.b1) * gf
+        v = cfg.b2 * st["v"] + (1 - cfg.b2) * gf * gf
+        mhat = m / (1 - cfg.b1 ** t)
+        vhat = v / (1 - cfg.b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and not _no_decay(path):
+            upd = upd + cfg.weight_decay * st["master"]
+        master = st["master"] - lr * upd
+        new_p.append(master.astype(p.dtype))
+        new_s.append({"m": m, "v": v, "master": master})
+
+    params = jax.tree.unflatten(treedef, new_p)
+    opt = jax.tree.unflatten(treedef, new_s)
+    return params, {"opt": opt, "step": step + 1}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,75 @@
+"""Test fixtures: an 8-host-device mesh for sharding tests.
+
+(8 devices for *smoke* sharding — the 512-device production mesh is only
+ever created by launch/dryrun.py, never here.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh4():
+    from repro.launch import mesh as LM
+    return LM.make_smoke_mesh((2, 2, 2, 1))
+
+
+@pytest.fixture(scope="session")
+def axes4(mesh4):
+    from repro.launch import mesh as LM
+    return LM.bind_4d(mesh4)
+
+
+@pytest.fixture(scope="session")
+def meshz():
+    from repro.launch import mesh as LM
+    return LM.make_smoke_mesh((1, 2, 2, 2))
+
+
+@pytest.fixture(scope="session")
+def axesz(meshz):
+    from repro.launch import mesh as LM
+    return LM.bind_4d(meshz)
+
+
+def train_smoke(arch: str, mesh, axes, *, steps=3, B=8, S=32,
+                overdecompose=2, check_decreases=True):
+    """Shared harness: a few real optimizer steps on the reduced config."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.partition import spec_tree_to_pspecs
+    from repro.launch import steps as ST
+    from repro.optim.adamw import AdamWConfig, init_state
+
+    cfg = get_config(arch).reduced()
+    params, specs = ST.init_model(cfg, axes, jax.random.PRNGKey(0),
+                                  dtype=jnp.float32)
+    params = ST.device_put_tree(mesh, params, spec_tree_to_pspecs(specs))
+    state = init_state(params)
+    step_fn, _, _ = ST.make_train_step(
+        cfg, mesh, axes, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=50),
+        ST.TrainOptions(overdecompose=overdecompose, dtype=jnp.float32))
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jax.numpy.asarray(
+        rng.randint(0, cfg.vocab_size, (B, S)), jax.numpy.int32),
+        "labels": jax.numpy.asarray(
+        rng.randint(0, cfg.vocab_size, (B, S)), jax.numpy.int32)}
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = jax.numpy.asarray(
+            rng.randn(B, cfg.encoder.n_ctx, cfg.encoder.input_dim),
+            jax.numpy.float32)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.numpy.asarray(
+            rng.randn(B, cfg.encoder.n_ctx, cfg.d_model), jax.numpy.float32)
+    losses = []
+    for _ in range(steps):
+        params, state, metrics = step_fn(params, state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1]), f"{arch}: non-finite loss"
+    if check_decreases and steps >= 3:
+        assert losses[-1] < losses[0], f"{arch}: loss did not decrease"
+    return cfg, losses

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm_model as CM
+from repro.data.synthetic import DataConfig, SyntheticText
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _factor_triples(g):
+    out = []
+    for a in range(1, g + 1):
+        if g % a:
+            continue
+        for b in range(1, g // a + 1):
+            if (g // a) % b:
+                continue
+            out.append((a, b, g // (a * b)))
+    return out
+
+
+@given(st.sampled_from([16, 32, 64, 128, 256]),
+       st.integers(6, 12), st.integers(8, 14))
+@settings(**SETTINGS)
+def test_comm_volume_nonnegative_and_bounded(g, logh, logtok):
+    """V >= the AM-GM lower bound of Eq. 5 for every decomposition."""
+    H, tokens = 1 << logh, 1 << logtok
+    layers = CM.transformer_layers(H)
+    for gx, gy, rest in _factor_triples(g)[:12]:
+        if rest < 1:
+            continue
+        d = CM.Decomposition(rest, gx, gy, 1)
+        v = CM.model_volume(layers, tokens, d,
+                            include_data_parallel=False)
+        assert v >= -1e-6
+        # per-layer Eq. 5 bound (n=3H,k=H layer):
+        lb = 2 * tokens / g * (2 * math.sqrt(3 * H * H * gx * gy)
+                               - 4 * H)
+        assert v >= lb - 1e-6
+
+
+@given(st.integers(4, 10), st.integers(4, 10), st.integers(1, 4),
+       st.integers(1, 4), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_transpose_swap_symmetry(logk, logn, gx, gy, gz):
+    """A transposed (k,n) layer has the volume of a normal layer with
+    x/y swapped (paper §4.1 Table 1 rule)."""
+    k, n = 1 << logk, 1 << logn
+    tokens = 4096
+    d = CM.Decomposition(2, gx, gy, gz)
+    d_sw = CM.Decomposition(2, gy, gx, gz)
+    a = CM.layer_volume(CM.LayerShape(k, n, transposed=True), tokens, d)
+    b = CM.layer_volume(CM.LayerShape(k, n, transposed=False), tokens, d_sw)
+    # weight z-terms depend only on gx*gy; activation terms swap
+    assert abs(a - b) / max(a, 1e-9) < 1e-9
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=10, deadline=None)
+def test_data_pipeline_deterministic(step):
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=3)
+    a = SyntheticText(cfg).batch(step)
+    b = SyntheticText(cfg).batch(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    assert a["tokens"].max() < 1000 and a["tokens"].min() >= 0
+    # labels are next-token shifted
+    full_a = SyntheticText(cfg).batch(step)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(2, 6),
+       st.booleans(), st.sampled_from([0, 24]))
+@settings(max_examples=15, deadline=None)
+def test_chunked_attention_matches_dense(nkv, group, logt, causal, window):
+    """Online-softmax chunked attention == dense attention (any shape)."""
+    from repro.layers.attention import attn_core, attn_core_chunked
+    T = 1 << logt
+    hq = nkv * group
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, T, hq, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, T, nkv, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, T, nkv, 16))
+    a = attn_core(q, k, v, causal=causal, window=window,
+                  chunked_threshold=1 << 20)
+    b = attn_core_chunked(q, k, v, causal=causal, window=window,
+                          bq=16, bk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=1e-5)
+
+
+@given(st.integers(2, 5), st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_rope_is_rotation(logt, logd):
+    """RoPE preserves norms and relative-position inner products."""
+    from repro.layers.rotary import apply_rope
+    T, d = 1 << logt, 1 << logd
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, T, 2, d))
+    pos = jnp.broadcast_to(jnp.arange(T), (1, T))
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-5)
+    # shift both q and k by the same offset -> same scores
+    y2 = apply_rope(x, pos + 7, 10000.0)
+    s1 = np.einsum("btHd,bsHd->bHts", np.asarray(y), np.asarray(y))
+    s2 = np.einsum("btHd,bsHd->bHts", np.asarray(y2), np.asarray(y2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=10, deadline=None)
+def test_lr_schedule_bounds(step):
+    from repro.optim.adamw import AdamWConfig, lr_at
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=64)
+    lr = float(lr_at(cfg, jnp.int32(step)))
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-5)
+
+
+def test_decomposition_enumeration_is_complete():
+    cons = CM.Constraints()
+    ds = list(CM.enumerate_decompositions(16, cons))
+    # number of ordered factorizations of 16 into 4 factors
+    assert len(ds) == len({(d.g_data, d.g_x, d.g_y, d.g_z) for d in ds})
+    assert all(d.g == 16 for d in ds)
+    assert len(ds) == 35  # C(4+4-1, 3) compositions of 2^4 exponents
