@@ -56,6 +56,7 @@ def main() -> None:
         "fig5_measured": measured.fig5_measured,
         "fig6": measured.fig6_validation,
         "overdecomp": measured.overdecomposition_overlap,
+        "overlap": measured.overlap_collectives,
         "kernels": measured.kernel_micro,
         "roofline": roofline_summary,
     }

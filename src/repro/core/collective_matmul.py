@@ -1,0 +1,262 @@
+"""Ring-decomposed collective matmuls (overlapped z-axis schedule).
+
+The blocking 4D schedule in :mod:`repro.core.parallel` materializes the
+z-gathered weight (``AG_z`` then one big GEMM) and reduce-scatters the
+full weight gradient (one big GEMM then ``RS_z``). Both serialize an
+expensive collective against an expensive GEMM. Following the decomposed
+collective-matmul technique (AxoNN, arXiv:2110.13005; survey
+arXiv:2403.07585), the three drivers here re-express those collectives as
+``lax.ppermute`` ring steps whose per-chunk GEMMs interleave with the
+permutes, so each hop's communication hides under the previous chunk's
+compute (XLA's latency-hiding scheduler sees p data-independent
+(permute, GEMM) pairs instead of one barrier).
+
+Ring convention (matches core/mesh ring helpers and the TPU RDMA idiom):
+send right (rank i -> i+1), so after ``s`` hops rank ``i`` holds the block
+originally owned by rank ``(i - s) mod p``.
+
+Three dataflow patterns cover every z collective on the hot path:
+
+  * place      — gathered dim is the GEMM's *output* dim:
+                 ``out[..., slot_j] = mm(block_j)``            (AG-matmul)
+  * accumulate — gathered dim is the GEMM's *contraction* dim:
+                 ``out = sum_j mm(lhs[..., seg_j], block_j)``  (AG-matmul)
+  * reduce-scatter — scatter dim is the GEMM's output dim:
+                 partial sums ride the ring, each rank's GEMM contribution
+                 is added just-in-time                         (RS-matmul)
+
+``chunks > 1`` splits each per-rank block into independent sub-rings for
+finer-grained permute/GEMM pairs (OverlapConfig.z_chunks).
+
+All drivers accumulate in fp32 (``preferred_element_type``), so results
+match the blocking schedule within fp32-accumulation reassociation only.
+Only single-name mesh axes take the fused path (callers fall back to the
+blocking schedule for tuple axes); ``p == 1`` degrades to the plain local
+GEMM with zero collectives.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compat import axis_size
+from repro.core.mesh import ring_perm as _ring_perm
+
+
+def effective_chunks(width: int, chunks: int) -> int:
+    """Largest c <= chunks dividing width (so odd shards never error)."""
+    c = max(1, min(chunks, width))
+    while width % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------- #
+# generic drivers
+# ---------------------------------------------------------------------- #
+
+def ring_place(block, name: str, mm: Callable, *, gdim: int,
+               chunks: int = 1):
+    """``concat_j mm(block_of_rank_j)`` along the output's last dim.
+
+    ``mm(piece) -> (..., piece_out)`` must map a block piece (sliced along
+    ``gdim``) to its output chunk; rank j's block lands at slot j, pieces
+    in slice order within the slot (identical to the blocking
+    gather-then-GEMM layout).
+    """
+    p = axis_size(name)
+    if p == 1:
+        return mm(block)
+    idx = lax.axis_index(name)
+    perm = _ring_perm(p)
+    gdim = gdim % block.ndim
+    chunks = effective_chunks(block.shape[gdim], chunks)
+    m = block.shape[gdim] // chunks
+    curs = [lax.slice_in_dim(block, q * m, (q + 1) * m, axis=gdim)
+            for q in range(chunks)]
+    out = None
+    piece_w = 0
+    for s in range(p):
+        j = (idx - s) % p
+        nxt: List = []
+        for q, cur in enumerate(curs):
+            y = mm(cur)
+            if out is None:
+                piece_w = y.shape[-1]
+                out = jnp.zeros(y.shape[:-1] + (p * chunks * piece_w,),
+                                y.dtype)
+            out = lax.dynamic_update_slice_in_dim(
+                out, y, (j * chunks + q) * piece_w, axis=-1)
+            if s < p - 1:
+                nxt.append(lax.ppermute(cur, name, perm))
+        curs = nxt
+    return out
+
+
+def ring_accumulate(lhs, block, name: str, mm: Callable, *, gdim: int,
+                    ldim: int = -1, chunks: int = 1):
+    """``sum_j mm(lhs_seg_j, block_of_rank_j)`` — gathered contraction.
+
+    ``lhs``'s ``ldim`` is segmented to match the gathered layout of the
+    blocks: rank j's piece q contracts with ``lhs[..., (j*chunks+q)*m :]``.
+    ``mm`` must return fp32 (partials are summed across the ring).
+    """
+    p = axis_size(name)
+    if p == 1:
+        return mm(lhs, block)
+    idx = lax.axis_index(name)
+    perm = _ring_perm(p)
+    gdim = gdim % block.ndim
+    ldim = ldim % lhs.ndim
+    chunks = effective_chunks(block.shape[gdim], chunks)
+    m = block.shape[gdim] // chunks
+    m_l = lhs.shape[ldim] // (p * chunks)
+    curs = [lax.slice_in_dim(block, q * m, (q + 1) * m, axis=gdim)
+            for q in range(chunks)]
+    acc = None
+    for s in range(p):
+        j = (idx - s) % p
+        nxt: List = []
+        for q, cur in enumerate(curs):
+            seg = lax.dynamic_slice_in_dim(
+                lhs, (j * chunks + q) * m_l, m_l, axis=ldim)
+            y = mm(seg, cur)
+            acc = y if acc is None else acc + y
+            if s < p - 1:
+                nxt.append(lax.ppermute(cur, name, perm))
+        curs = nxt
+    return acc
+
+
+def ring_reduce_scatter_mm(name: str, mm: Callable, *, block_w: int,
+                           chunks: int = 1):
+    """Fused ``psum_scatter(full_contribution, name, dim=-1)`` where the
+    full contribution never materializes.
+
+    ``mm(start, width) -> fp32 (..., width)`` computes this rank's GEMM
+    contribution to slice ``[start, start+width)`` of the scatter dim;
+    ``block_w`` is the per-rank output block width. The partial destined
+    for rank j is computed just-in-time as the running sum passes through
+    (p GEMMs, p-1 permutes per sub-ring).
+    """
+    p = axis_size(name)
+    if p == 1:
+        return mm(jnp.int32(0), block_w)
+    idx = lax.axis_index(name)
+    perm = _ring_perm(p)
+    chunks = effective_chunks(block_w, chunks)
+    m = block_w // chunks
+    outs = []
+    for q in range(chunks):
+        recv = None
+        for s in range(1, p):
+            j = (idx - s) % p
+            g = mm(j * block_w + q * m, m)
+            part = g if recv is None else recv + g
+            recv = lax.ppermute(part, name, perm)
+        g = mm(idx * block_w + q * m, m)
+        outs.append(g if recv is None else recv + g)
+    return outs[0] if chunks == 1 else jnp.concatenate(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------- #
+# concrete overlapped primitives (called from core/parallel.py)
+# ---------------------------------------------------------------------- #
+
+def ag_matmul(x, w, name: str, *, chunks: int = 1):
+    """``x @ AG_name(w, dim=1)`` (fwd of tp_matmul), ring-overlapped.
+
+    x (..., k); w (k, n_loc). Returns (..., p*n_loc) in x.dtype."""
+    def mm(wb):
+        return lax.dot_general(
+            x, wb, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    return ring_place(w, name, mm, gdim=1, chunks=chunks)
+
+
+def ag_matmul_batched(x, w, name: str, *, chunks: int = 1):
+    """Per-expert fwd: x (E, C, k) @ AG_name(w (E, k, n_loc), dim=2)."""
+    def mm(wb):
+        return lax.dot_general(
+            x, wb, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    return ring_place(w, name, mm, gdim=2, chunks=chunks)
+
+
+def accum_matmul_dx(dy, w, name: str, *, chunks: int = 1):
+    """``dy @ AG_name(w, dim=1)^T`` (bwd dX of tp_matmul) without
+    materializing the gathered weight. Returns fp32 (..., k)."""
+    def mm(seg, wb):
+        return lax.dot_general(
+            seg, wb, (((seg.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_accumulate(dy, w, name, mm, gdim=1, chunks=chunks)
+
+
+def accum_matmul_dx_batched(dy, w, name: str, *, chunks: int = 1):
+    """Per-expert bwd dX: dy (E, C, n_use) x w (E, k, n_loc). fp32."""
+    def mm(seg, wb):
+        return lax.dot_general(
+            seg, wb, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return ring_accumulate(dy, w, name, mm, gdim=2, chunks=chunks)
+
+
+def rs_matmul_dw(x2d, dy2d, name: str, *, block_w: int, chunks: int = 1):
+    """``RS_name(x^T @ dy, dim=1)`` (bwd dW of tp_matmul) fused: each
+    rank's (k, block) GEMM slice is computed as the ring partial for that
+    block passes through. x2d (T, k); dy2d (T, n_use). Returns fp32
+    (k, block_w)."""
+    def mm(start, width):
+        seg = lax.dynamic_slice_in_dim(dy2d, start, width, axis=1)
+        return lax.dot_general(
+            x2d, seg, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)
+
+
+def rs_matmul_dw_batched(x, dy, name: str, *, block_w: int,
+                         chunks: int = 1):
+    """Per-expert bwd dW: RS over dim 2 of x (E,C,k)^T @ dy (E,C,n_use)."""
+    def mm(start, width):
+        seg = lax.dynamic_slice_in_dim(dy, start, width, axis=2)
+        return lax.dot_general(
+            x, seg, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)
+
+
+def accum_matmul_tied(h, table, name: str, *, chunks: int = 1):
+    """Tied LM head fwd: ``h @ AG_name(table, dim=1)^T`` — the gathered
+    dim is the contraction (d) dim. h (..., d/x); table (V/y, d_loc).
+    Returns fp32 (..., V/y)."""
+    def mm(seg, tb):
+        return lax.dot_general(
+            seg, tb, (((seg.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_accumulate(h, table, name, mm, gdim=1, chunks=chunks)
+
+
+def ag_matmul_tied_dh(dlogits, table, name: str, *, chunks: int = 1):
+    """Tied LM head bwd dh: ``dlogits @ AG_name(table, dim=1)`` — the
+    gathered dim is the *output* (d) dim. Returns (..., d/x) fp32."""
+    def mm(tb):
+        return lax.dot_general(
+            dlogits, tb, (((dlogits.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_place(table, name, mm, gdim=1, chunks=chunks)
+
+
+def rs_matmul_tied_dt(dl2d, h2d, name: str, *, block_w: int,
+                      chunks: int = 1):
+    """Tied LM head bwd dtable: ``RS_name(dlogits^T @ h, dim=1)`` fused.
+    dl2d (T, V/y); h2d (T, d/x). Returns fp32 (V/y, block_w)."""
+    def mm(start, width):
+        seg = lax.dynamic_slice_in_dim(h2d, start, width, axis=1)
+        return lax.dot_general(
+            dl2d, seg, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)

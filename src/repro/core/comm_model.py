@@ -13,6 +13,16 @@ All volumes are *elements sent+received per device per iteration* (multiply
 by dtype bytes for bytes), mirroring the paper. Collectives are assumed
 bandwidth-optimal (Patarasuk & Yuan): ``V_AR = 2 (p-1)/p * buf``,
 ``V_AG = V_RS = (p-1)/p * buf_full``.
+
+Beyond the paper's volume-only ranking, the α-β *time* model
+(:class:`HardwareParams`, :func:`predict_step_time`) prices each
+collective as ``steps * α + bytes / bw`` and — when an
+:class:`~repro.core.overlap.OverlapConfig` enables the ring-decomposed
+collective matmuls — hides the z-axis weight traffic under the layer's
+own GEMM time, charging only the *exposed* remainder. With α = 0 and
+overlap disabled the exposed-communication term reduces exactly to
+``model_volume * bytes_per_elem / bw``, so the volume model is the
+degenerate point of the time model.
 """
 from __future__ import annotations
 
@@ -20,6 +30,8 @@ import dataclasses
 import itertools
 import math
 from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.overlap import OverlapConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,12 +81,17 @@ def gather_or_scatter_volume(p: int, full_buf: float) -> float:
 
 
 def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
-                 cached_weight_gather: bool = False,
+                 overlap: Optional[OverlapConfig] = None,
                  include_data_parallel: bool = True) -> float:
     """Per-GPU per-iteration volume (elements) for one layer, fwd+bwd.
 
     ``tokens`` is the *global* batch in tokens (B*S). Paper Eqs. 2-4 are the
     ``g_z = 1`` specialization of this function.
+
+    ``overlap.cache_weight_gather`` drops the backward re-gather of the
+    weight (one AG_z per layer). The ring decomposition itself moves the
+    same bytes as the blocking collectives, so the other overlap knobs do
+    not change *volume* — only :func:`predict_step_time` sees them.
     """
     gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
     m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
@@ -84,7 +101,8 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     v_bp = allreduce_volume(gy, m_local * ls.k / gx)
     # z-axis weight collectives (4D): AG fwd (+AG bwd if not cached) + RS bwd
     w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
-    n_gathers = 2 if not cached_weight_gather else 1
+    cached = bool(overlap and overlap.cache_weight_gather)
+    n_gathers = 1 if cached else 2
     v_z = (n_gathers + 1) * gather_or_scatter_volume(d.g_z, w_full_per_xy)
     # data-parallel gradient all-reduce (the text measures it as 1e-3 of the
     # tensor terms but we keep it for completeness)
@@ -127,6 +145,134 @@ def paper_transformer_volume(tokens: int, hidden: int, g: int,
 def paper_optimal_gc(g_tensor: int) -> float:
     """Eq. 7: G_c = sqrt(3 * G_tensor)."""
     return math.sqrt(3.0 * g_tensor)
+
+
+# ---------------------------------------------------------------------- #
+# α-β (latency + bandwidth) overlap-aware time model
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class HardwareParams:
+    """Link/compute constants for the step-time predictor.
+
+    ``alpha`` is the per-ring-hop launch latency, ``link_bw`` the
+    per-device injection bandwidth, ``flops`` the achievable matmul rate.
+    ``overlap_efficiency`` is the fraction of a layer's GEMM time the
+    scheduler can actually use to hide ring traffic (1.0 = perfect
+    latency hiding; real schedulers lose some to chunk-boundary bubbles).
+    Defaults are TPU v5e (launch/roofline.py uses the same constants).
+    """
+
+    alpha: float = 1e-6
+    link_bw: float = 50e9
+    flops: float = 197e12
+    bytes_per_elem: float = 2.0
+    overlap_efficiency: float = 0.8
+
+
+TPU_V5E = HardwareParams()
+
+
+def collective_time(kind: str, p: int, buf: float,
+                    hw: HardwareParams) -> float:
+    """α-β time of one bandwidth-optimal (ring) collective.
+
+    ``buf`` is in elements: the reduced buffer for ``all_reduce``, the
+    full gathered buffer for ``all_gather``/``reduce_scatter`` — the same
+    conventions as the volume functions above, which supply the byte
+    term; the α term charges one hop per ring step (AR = 2(p-1) steps,
+    AG/RS = p-1)."""
+    if p <= 1:
+        return 0.0
+    if kind == "all_reduce":
+        vol, steps = allreduce_volume(p, buf), 2 * (p - 1)
+    elif kind in ("all_gather", "reduce_scatter"):
+        vol, steps = gather_or_scatter_volume(p, buf), p - 1
+    else:
+        raise ValueError(f"unknown collective kind {kind!r}")
+    return hw.alpha * steps + vol * hw.bytes_per_elem / hw.link_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class StepTime:
+    """Predicted per-device step time, decomposed.
+
+    ``hidden_comm`` is communication that rides under compute (the ring-
+    decomposed z collectives when overlap is on); only ``exposed_comm``
+    adds wall-clock time."""
+
+    compute: float
+    exposed_comm: float
+    hidden_comm: float
+
+    @property
+    def total(self) -> float:
+        return self.compute + self.exposed_comm
+
+    def __add__(self, o: "StepTime") -> "StepTime":
+        return StepTime(self.compute + o.compute,
+                        self.exposed_comm + o.exposed_comm,
+                        self.hidden_comm + o.hidden_comm)
+
+
+ZERO_TIME = StepTime(0.0, 0.0, 0.0)
+
+
+def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
+               hw: HardwareParams = TPU_V5E, *,
+               overlap: Optional[OverlapConfig] = None,
+               include_data_parallel: bool = True) -> StepTime:
+    """Overlap-aware α-β time of one layer, fwd+bwd (cf. layer_volume).
+
+    Compute: 3 GEMMs (fwd Y, bwd dX, bwd dW) of 2·m·k·n/(gx·gy) flops
+    each. The x/y activation all-reduces are blocking (overdecomposition
+    overlaps them *across* batch shards; that is a step-level effect the
+    dry-run measures, not modeled here). The z weight collectives are the
+    ring-decomposed ones: with ``overlap.matmul`` they hide under up to
+    ``overlap_efficiency`` of this layer's own compute."""
+    gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
+    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
+    t_compute = 6.0 * m_local * ls.k * ls.n / (gx * gy) / hw.flops
+    # blocking activation all-reduces (Eqs. 2-3)
+    t_act = (collective_time("all_reduce", gx, m_local * ls.n / gy, hw)
+             + collective_time("all_reduce", gy, m_local * ls.k / gx, hw))
+    # z-axis weight collectives (AG fwd [+AG bwd] + RS bwd)
+    w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
+    cached = bool(overlap and overlap.cache_weight_gather)
+    n_gathers = 1 if cached else 2
+    t_z = (n_gathers
+           * collective_time("all_gather", d.g_z, w_full_per_xy, hw)
+           + collective_time("reduce_scatter", d.g_z, w_full_per_xy, hw))
+    t_dp = 0.0
+    if include_data_parallel:
+        t_dp = collective_time("all_reduce", d.g_data,
+                               w_full_per_xy / d.g_z, hw)
+    if overlap is not None and overlap.matmul and d.g_z > 1:
+        window = hw.overlap_efficiency * t_compute
+        hidden = min(t_z, window)
+    else:
+        hidden = 0.0
+    exposed = t_act + (t_z - hidden) + t_dp
+    return StepTime(ls.count * t_compute, ls.count * exposed,
+                    ls.count * hidden)
+
+
+def predict_step_time(layers: Sequence[LayerShape], tokens: int,
+                      d: Decomposition, hw: HardwareParams = TPU_V5E, *,
+                      overlap: Optional[OverlapConfig] = None,
+                      include_data_parallel: bool = True) -> StepTime:
+    """Per-device per-iteration predicted time for a layer list (§5's
+    analytical model, upgraded from volume to overlap-aware α-β time).
+
+    With ``overlap=None`` (or all knobs off) and ``hw.alpha == 0`` the
+    exposed-communication term equals
+    ``model_volume(...) * hw.bytes_per_elem / hw.link_bw`` exactly.
+    """
+    out = ZERO_TIME
+    for ls in layers:
+        out = out + layer_time(ls, tokens, d, hw, overlap=overlap,
+                               include_data_parallel=include_data_parallel)
+    return out
 
 
 # ---------------------------------------------------------------------- #
@@ -179,13 +325,35 @@ def enumerate_decompositions(g: int, c: Constraints = Constraints()
 
 def optimize_decomposition(layers: Sequence[LayerShape], tokens: int, g: int,
                            constraints: Constraints = Constraints(),
-                           top_k: int = 1, **kw
+                           top_k: int = 1, *, objective: str = "volume",
+                           hw: Optional[HardwareParams] = None, **kw
                            ) -> List[Tuple[Decomposition, float]]:
-    """Exhaustively rank decompositions by modeled volume (paper §5.2 does
-    this analytically for transformers; we do it for arbitrary layer lists,
-    which is what the paper's 'general model' promises)."""
-    scored = [(d, model_volume(layers, tokens, d, **kw))
-              for d in enumerate_decompositions(g, constraints)]
+    """Exhaustively rank decompositions (paper §5.2 does this analytically
+    for transformers; we do it for arbitrary layer lists, which is what
+    the paper's 'general model' promises).
+
+    ``objective='volume'`` scores by modeled per-device element volume
+    (the paper's Eq. 5 criterion); ``objective='time'`` by the α-β
+    overlap-aware :func:`predict_step_time` total — which additionally
+    sees latency (penalizing needlessly deep rings) and the overlap knobs
+    (``overlap=OverlapConfig(...)`` in ``kw`` hides z traffic under
+    compute, making z-heavier decompositions cheaper than volume alone
+    suggests)."""
+    if objective == "time":
+        hw = hw or TPU_V5E
+
+        def score(d):
+            return predict_step_time(layers, tokens, d, hw, **kw).total
+    elif objective == "volume":
+        if hw is not None:
+            raise ValueError("hw is only meaningful with objective='time' "
+                             "(the volume model has no hardware terms)")
+
+        def score(d):
+            return model_volume(layers, tokens, d, **kw)
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
+    scored = [(d, score(d)) for d in enumerate_decompositions(g, constraints)]
     if not scored:
         raise ValueError(f"no feasible decomposition of {g} devices under "
                          f"{constraints}")

@@ -1,0 +1,78 @@
+"""JAX version-compat shims.
+
+The repo targets the modern spellings (``jax.shard_map`` with a
+``check_vma`` kwarg, ``jax.make_mesh(..., axis_types=...)``); older
+installed JAX releases (e.g. 0.4.x) only ship
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` and a
+``make_mesh`` without ``axis_types``. Every import site goes through this
+module so the rest of the codebase can use one spelling.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.6: public top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x/0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern ``check_vma`` kwarg on any JAX.
+
+    On older releases the same knob is called ``check_rep``; on newer ones
+    ``check_rep`` is gone. We translate to whatever the installed version
+    accepts (dropping it entirely if neither name exists).
+    """
+    kw: dict = {}
+    if "check_vma" in _SM_PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _SM_PARAMS:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+_MM_PARAMS = set(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, axis_types: Optional[Sequence[Any]] = None,
+              devices=None):
+    """``jax.make_mesh`` tolerating the ``axis_types`` kwarg everywhere.
+
+    ``axis_types`` (``jax.sharding.AxisType``) only exists on newer JAX;
+    older versions treat every axis the way ``Auto`` does, so dropping the
+    argument preserves behaviour.
+    """
+    kw: dict = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and "axis_types" in _MM_PARAMS:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(name):
+        """Static size of a named mesh axis inside a shard_map body.
+
+        ``jax.lax.axis_size`` only exists on newer JAX; on 0.4.x the
+        axis-env lookup spells it ``jax.core.axis_frame(name)`` (which
+        returns the size directly)."""
+        return jax.core.axis_frame(name)
+
+
+def default_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` where available, else None."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return None
+    return (at.Auto,) * n

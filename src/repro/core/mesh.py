@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import axis_size as _axis_size
+from repro.core.overlap import OverlapConfig
+
 AxisName = Union[str, Tuple[str, ...], None]
 
 
@@ -50,6 +53,9 @@ class MeshAxes:
     z: AxisName = "z"
     # static sizes, captured from the physical mesh at bind time
     sizes: Tuple[Tuple[str, int], ...] = ()
+    # comm/compute-overlap knobs for the tp primitives (core/overlap.py);
+    # rides here so layers don't thread an extra argument everywhere
+    overlap: OverlapConfig = OverlapConfig()
 
     # ------------------------------------------------------------------ #
     def size(self, axis: AxisName) -> int:
@@ -96,6 +102,9 @@ class MeshAxes:
 
     def swap_xy(self) -> "MeshAxes":
         return dataclasses.replace(self, x=self.y, y=self.x)
+
+    def with_overlap(self, overlap: OverlapConfig) -> "MeshAxes":
+        return dataclasses.replace(self, overlap=overlap)
 
     # -- PartitionSpec helpers ---------------------------------------- #
     def pspec(self, *dims: AxisName) -> P:
@@ -159,13 +168,109 @@ def psum_scatter(v, axis: AxisName, *, dim: int, tiled: bool = True):
     return out
 
 
+def ring_perm(p: int, shift: int = 1):
+    """The send-right ring permutation (rank i -> i + shift mod p).
+
+    Single source of the ring convention shared by the helpers below and
+    the fused drivers in core/collective_matmul.py: after ``s`` hops rank
+    ``i`` holds the block originally owned by rank ``(i - s) mod p``."""
+    return [(i, (i + shift) % p) for i in range(p)]
+
+
+def ppermute_ring(v, axis: AxisName, shift: int = 1):
+    """One ring hop: send to (i + shift) mod p along ``axis``.
+
+    Identity on unmapped axes. Multi-name axes hop along the flattened
+    ring of the combined (row-major) index.
+    """
+    n = _names(axis)
+    if not n:
+        return v
+    p = math.prod(_axis_size(name) for name in n)
+    if p == 1:
+        return v
+    return jax.lax.ppermute(v, n if len(n) > 1 else n[0], ring_perm(p, shift))
+
+
+def _ring_ag_one(v, name: str, dim: int):
+    p = _axis_size(name)
+    if p == 1:
+        return v
+    idx = jax.lax.axis_index(name)
+    perm = ring_perm(p)
+    chunk = v.shape[dim]
+    out_shape = list(v.shape)
+    out_shape[dim] = p * chunk
+    out = jnp.zeros(tuple(out_shape), v.dtype)
+    cur = v
+    for s in range(p):
+        # after s hops of the send-right ring, we hold rank (i - s)'s block
+        j = (idx - s) % p
+        out = jax.lax.dynamic_update_slice_in_dim(out, cur, j * chunk,
+                                                  axis=dim)
+        if s < p - 1:
+            cur = jax.lax.ppermute(cur, name, perm)
+    return out
+
+
+def ring_all_gather(v, axis: AxisName, *, dim: int):
+    """``all_gather(tiled=True)`` decomposed into p-1 ``ppermute`` ring
+    steps (so XLA can overlap each hop with unrelated compute). Bitwise
+    the same result ordering as :func:`all_gather`; identity on unmapped
+    axes."""
+    n = _names(axis)
+    if not n:
+        return v
+    dim = dim % v.ndim
+    out = v
+    for name in n:
+        out = _ring_ag_one(out, name, dim)
+    return out
+
+
+def _ring_rs_one(v, name: str, dim: int):
+    p = _axis_size(name)
+    if p == 1:
+        return v
+    if v.shape[dim] % p:
+        raise ValueError(  # psum_scatter(tiled=True) rejects this too
+            f"ring_reduce_scatter: dim {dim} of size {v.shape[dim]} not "
+            f"divisible by axis {name!r} size {p}")
+    idx = jax.lax.axis_index(name)
+    perm = ring_perm(p)
+    chunk = v.shape[dim] // p
+    recv = None
+    for s in range(1, p):
+        # the partial destined for rank (i - s) leaves here at step s
+        j = (idx - s) % p
+        g = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=dim)
+        part = g if recv is None else recv + g
+        recv = jax.lax.ppermute(part, name, perm)
+    g = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=dim)
+    return g if recv is None else recv + g
+
+
+def ring_reduce_scatter(v, axis: AxisName, *, dim: int):
+    """``psum_scatter(tiled=True)`` as a p-1 step ``ppermute`` ring:
+    each rank's partial for block j is added just-in-time as the running
+    sum passes through. Identity on unmapped axes."""
+    n = _names(axis)
+    if not n:
+        return v
+    dim = dim % v.ndim
+    out = v
+    for name in reversed(n):
+        out = _ring_rs_one(out, name, dim)
+    return out
+
+
 def axis_index(axis: AxisName):
     n = _names(axis)
     if not n:
         return jnp.int32(0)
     idx = jnp.int32(0)
     for name in n:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 

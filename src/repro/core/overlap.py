@@ -1,0 +1,70 @@
+"""OverlapConfig: the comm/compute-overlap knobs for the 4D primitives.
+
+The paper's first key strategy is to "aggressively overlap expensive
+collective operations with computation". Two mechanisms implement it here:
+
+  * overdecomposition (paper §4.2, core/overdecompose.py) — overlap
+    *between* batch micro-shards, and
+  * ring-decomposed collective matmuls (core/collective_matmul.py) —
+    overlap *inside* each layer: the z-axis weight all-gather / gradient
+    reduce-scatter is decomposed into ``lax.ppermute`` ring steps whose
+    per-chunk GEMMs interleave with the permutes, so the weight traffic
+    hides under the layer's own compute.
+
+An :class:`OverlapConfig` instance rides on :class:`repro.core.mesh.
+MeshAxes` (``axes.with_overlap(cfg)``) so every ``tp_*`` primitive sees it
+without threading an extra argument through the layer stack. It is a
+frozen (hashable) dataclass: it participates in ``custom_vjp`` nondiff
+args and jit static args unchanged.
+
+``cache_weight_gather`` subsumes the old module-global
+``parallel.CACHE_WEIGHT_GATHER`` trace-time flag: cache the z-gathered
+weight from the forward pass instead of re-gathering in the backward pass
+(trades one AG_z per layer for holding the full (k_local, n_local) weight
+across the residual).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapConfig:
+    """Per-primitive on/off switches + ring chunking for collective matmuls.
+
+    matmul / batched_matmul / tied_logits: use the ring-decomposed
+    (overlapped) z-axis schedule inside ``tp_matmul`` /
+    ``tp_batched_matmul`` / ``tied_lm_logits``. Off (default) keeps the
+    blocking all-gather / reduce-scatter schedule.
+
+    z_chunks: how many independent ring pipelines the z-axis collective of
+    one matmul is split into. 1 = one ring whose steps already interleave
+    one GEMM per hop; c > 1 splits each per-device weight block into ``c``
+    sub-blocks with their own (smaller) rings, giving the scheduler
+    finer-grained permute/GEMM pairs to overlap. Must divide the per-device
+    block's gathered dimension.
+
+    cache_weight_gather: keep the z-gathered weight from the forward as a
+    residual instead of re-gathering it in the backward (EXPERIMENTS.md
+    §Perf).
+    """
+
+    matmul: bool = False
+    batched_matmul: bool = False
+    tied_logits: bool = False
+    z_chunks: int = 1
+    cache_weight_gather: bool = False
+
+    def __post_init__(self):
+        if self.z_chunks < 1:
+            raise ValueError(f"z_chunks must be >= 1, got {self.z_chunks}")
+
+    @property
+    def any_enabled(self) -> bool:
+        return self.matmul or self.batched_matmul or self.tied_logits
+
+    @classmethod
+    def all_on(cls, *, z_chunks: int = 1,
+               cache_weight_gather: bool = False) -> "OverlapConfig":
+        return cls(matmul=True, batched_matmul=True, tied_logits=True,
+                   z_chunks=z_chunks, cache_weight_gather=cache_weight_gather)

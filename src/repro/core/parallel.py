@@ -28,15 +28,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import collective_matmul as CMM
 from repro.core import mesh as M
+from repro.core.overlap import OverlapConfig  # noqa: F401  (re-export)
 from repro.core.partition import Boxed
 
-# Perf knob (EXPERIMENTS.md §Perf): cache the z-gathered weight from the
-# forward pass instead of re-gathering in the backward pass. Trades one
-# all-gather of W per layer (collective term) for holding the full
-# (k_local, n_local) weight across the residual (memory term). Trace-time
-# constant: flip before jit/lower.
-CACHE_WEIGHT_GATHER = False
+# The overlap knobs (ring-decomposed z collectives, weight-gather caching)
+# ride on ``axes.overlap`` — an OverlapConfig bound via
+# ``axes.with_overlap(...)`` (see core/overlap.py and EXPERIMENTS.md
+# §Perf). The old module-global CACHE_WEIGHT_GATHER trace-time flag is
+# subsumed by ``axes.overlap.cache_weight_gather``.
 
 
 # ---------------------------------------------------------------------- #
@@ -65,6 +66,20 @@ def _logical(axes: M.MeshAxes, shard: Optional[str]):
 def _axes_for(axes: M.MeshAxes, transposed: bool):
     """(contraction axis, output axis) — swapped for transposed layers."""
     return (axes.y, axes.x) if transposed else (axes.x, axes.y)
+
+
+def _zring(axes: M.MeshAxes, enabled: bool):
+    """Mesh axis name for the fused ring path, or None for blocking.
+
+    The ring drivers need a single named axis of size > 1; tuple z axes
+    and unmapped/size-1 z fall back to the blocking schedule (which is
+    itself an identity over z in the size-1 case)."""
+    if not enabled:
+        return None
+    n = M._names(axes.z)
+    if len(n) != 1 or axes.gz <= 1:
+        return None
+    return n[0]
 
 
 def wspec(axes: M.MeshAxes, in_shard: Optional[str], out_shard: Optional[str]
@@ -123,43 +138,74 @@ def tp_matmul(x, w, axes: M.MeshAxes, in_shard: Optional[str] = "x",
     (in_shard='x', out_shard='y') is a paper "normal" layer, ('y', 'x') a
     paper "transposed" layer (§4.1); (x, None)/(None, y)/... cover shared
     projections (MLA latents, MoE routers, modality projectors).
+
+    With ``axes.overlap.matmul`` set, the z-axis weight collectives run as
+    ring-decomposed collective matmuls (core/collective_matmul.py): the
+    forward AG_z becomes per-chunk GEMMs interleaved with ``ppermute``
+    hops, the backward dW reduce-scatter a fused RS-matmul. The collective
+    *schedule* (what is reduced where) is unchanged — only its
+    decomposition, so results match within fp32-accum reassociation.
     """
     in_ax = _logical(axes, in_shard)
-    wf = M.all_gather(w, axes.z, dim=1)            # AG_z (4D)
-    y = _mm(x, wf)                                  # local GEMM (line 6)
+    ring = _zring(axes, axes.overlap.matmul)
+    if ring is None:
+        wf = M.all_gather(w, axes.z, dim=1)        # AG_z (4D)
+        y = _mm(x, wf)                              # local GEMM (line 6)
+    else:
+        y = CMM.ag_matmul(x, w, ring, chunks=axes.overlap.z_chunks)
     return M.psum(y, in_ax)                         # All-Reduce_c (line 6)
 
 
 def _tpmm_fwd(x, w, axes, in_shard, out_shard):
     in_ax = _logical(axes, in_shard)
-    wf = M.all_gather(w, axes.z, dim=1)
-    y = M.psum(_mm(x, wf), in_ax)
+    ov = axes.overlap
+    ring = _zring(axes, ov.matmul)
     # paper line 7 caches the *local* partitions; by default we re-gather
     # over z in the backward pass to keep the z-sharded weight footprint
-    # (CACHE_WEIGHT_GATHER=True keeps wf and saves one AG_z).
-    if CACHE_WEIGHT_GATHER:
-        return y, (x, None, wf)
-    return y, (x, w, None)
+    # (overlap.cache_weight_gather keeps wf and saves one AG_z).
+    if ov.cache_weight_gather:
+        wf = (M.ring_all_gather(w, axes.z, dim=1) if ring is not None
+              else M.all_gather(w, axes.z, dim=1))
+        y = M.psum(_mm(x, wf), in_ax)
+        return y, (x, w, wf)
+    if ring is None:
+        wf = M.all_gather(w, axes.z, dim=1)
+        y = _mm(x, wf)
+    else:
+        y = CMM.ag_matmul(x, w, ring, chunks=ov.z_chunks)
+    return M.psum(y, in_ax), (x, w, None)
 
 
 def _tpmm_bwd(axes, in_shard, out_shard, res, dy):
     x, w, wf = res
+    ov = axes.overlap
+    ring = _zring(axes, ov.matmul)
     out_ax = _logical(axes, out_shard)
-    if wf is None:
-        wf = M.all_gather(w, axes.z, dim=1)        # re-gather (AG_z)
-    # dX = All-Reduce_r(dY @ W^T)  (line 13)
-    dx = M.psum(jax.lax.dot_general(
-        dy, wf, (((dy.ndim - 1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(x.dtype), out_ax)
+    # dX = All-Reduce_r(dY @ W^T)  (line 13); the z re-gather of W fuses
+    # into the GEMM as a ring over the contraction segments
+    if wf is None and ring is not None:
+        dx = CMM.accum_matmul_dx(dy, w, ring,
+                                 chunks=ov.z_chunks).astype(x.dtype)
+    else:
+        if wf is None:
+            wf = M.all_gather(w, axes.z, dim=1)    # re-gather (AG_z)
+        dx = jax.lax.dot_general(
+            dy, wf, (((dy.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    dx = M.psum(dx, out_ax)
     # dW = X^T @ dY, reduce-scattered over z (line 14 + 4D)
     k = x.shape[-1]
     n = dy.shape[-1]
-    dw = jax.lax.dot_general(
-        x.reshape(-1, k), dy.reshape(-1, n),
-        (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    dw = M.psum_scatter(dw, axes.z, dim=1).astype(wf.dtype)
-    return dx, dw
+    if ring is not None:
+        dw = CMM.rs_matmul_dw(x.reshape(-1, k), dy.reshape(-1, n), ring,
+                              block_w=w.shape[1], chunks=ov.z_chunks)
+    else:
+        dw = jax.lax.dot_general(
+            x.reshape(-1, k), dy.reshape(-1, n),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dw = M.psum_scatter(dw, axes.z, dim=1)
+    return dx, dw.astype(w.dtype)
 
 
 tp_matmul.defvjp(_tpmm_fwd, _tpmm_bwd)
@@ -188,29 +234,45 @@ def tp_batched_matmul(x, w, axes: M.MeshAxes, in_shard: Optional[str],
 
     x: (E_local, C, k_local); w: (E_local, k_local, n_local/z).
     The expert dim E is itself sharded over ``y`` by the caller (MoE), so
-    ``in_shard``/``out_shard`` here are 'x' or None."""
-    wf = M.all_gather(w, axes.z, dim=2)
-    return M.psum(_bmm(x, wf), _logical(axes, in_shard))
+    ``in_shard``/``out_shard`` here are 'x' or None.
+
+    ``axes.overlap.batched_matmul`` rings the z collectives exactly as in
+    tp_matmul."""
+    ring = _zring(axes, axes.overlap.batched_matmul)
+    if ring is None:
+        wf = M.all_gather(w, axes.z, dim=2)
+        y = _bmm(x, wf)
+    else:
+        y = CMM.ag_matmul_batched(x, w, ring, chunks=axes.overlap.z_chunks)
+    return M.psum(y, _logical(axes, in_shard))
 
 
 def _tpbmm_fwd(x, w, axes, in_shard, out_shard):
-    wf = M.all_gather(w, axes.z, dim=2)
-    y = M.psum(_bmm(x, wf), _logical(axes, in_shard))
+    y = tp_batched_matmul.__wrapped__(x, w, axes, in_shard, out_shard)
     return y, (x, w)
 
 
 def _tpbmm_bwd(axes, in_shard, out_shard, res, dy):
     x, w = res
-    wf = M.all_gather(w, axes.z, dim=2)
-    dx = M.psum(jax.lax.dot_general(
-        dy, wf, (((2,), (2,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32).astype(x.dtype),
-        _logical(axes, out_shard))
-    dw = jax.lax.dot_general(
-        x, dy, (((1,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)
-    dw = M.psum_scatter(dw, axes.z, dim=2).astype(w.dtype)
-    return dx, dw
+    ov = axes.overlap
+    ring = _zring(axes, ov.batched_matmul)
+    if ring is None:
+        wf = M.all_gather(w, axes.z, dim=2)
+        dx = jax.lax.dot_general(
+            dy, wf, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    else:
+        dx = CMM.accum_matmul_dx_batched(dy, w, ring, chunks=ov.z_chunks)
+    dx = M.psum(dx.astype(x.dtype), _logical(axes, out_shard))
+    if ring is None:
+        dw = jax.lax.dot_general(
+            x, dy, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        dw = M.psum_scatter(dw, axes.z, dim=2)
+    else:
+        dw = CMM.rs_matmul_dw_batched(x, dy, ring, block_w=w.shape[2],
+                                      chunks=ov.z_chunks)
+    return dx, dw.astype(w.dtype)
 
 
 tp_batched_matmul.defvjp(_tpbmm_fwd, _tpbmm_bwd)
@@ -368,27 +430,47 @@ def tied_lm_logits(h, table, axes: M.MeshAxes):
 
 
 def _tied_fwd(h, table, axes):
-    tf = M.all_gather(table, axes.z, dim=1)          # (V/y, d/x)
-    logits = jax.lax.dot_general(
-        h, tf, (((h.ndim - 1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(h.dtype)
-    logits = M.psum(logits, axes.x)
+    ring = _zring(axes, axes.overlap.tied_logits)
+    if ring is None:
+        tf = M.all_gather(table, axes.z, dim=1)      # (V/y, d/x)
+        logits = jax.lax.dot_general(
+            h, tf, (((h.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        # the gathered (d) dim is the contraction dim here: ring-
+        # accumulate over the z segments of h against the table blocks
+        logits = CMM.accum_matmul_tied(h, table, ring,
+                                       chunks=axes.overlap.z_chunks)
+    logits = M.psum(logits.astype(h.dtype), axes.x)
     return logits, (h, table)
 
 
 def _tied_bwd(axes, res, dlogits):
     h, table = res
-    tf = M.all_gather(table, axes.z, dim=1)
-    dh = M.psum(jax.lax.dot_general(
-        dlogits, tf, (((dlogits.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(h.dtype), axes.y)
+    ov = axes.overlap
+    ring = _zring(axes, ov.tied_logits)
+    if ring is None:
+        tf = M.all_gather(table, axes.z, dim=1)
+        dh = jax.lax.dot_general(
+            dlogits, tf, (((dlogits.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        dh = CMM.ag_matmul_tied_dh(dlogits, table, ring,
+                                   chunks=ov.z_chunks)
+    dh = M.psum(dh.astype(h.dtype), axes.y)
     v = dlogits.shape[-1]
     d = h.shape[-1]
-    dt = jax.lax.dot_general(
-        dlogits.reshape(-1, v), h.reshape(-1, d),
-        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    dt = M.psum_scatter(dt, axes.z, dim=1).astype(table.dtype)
-    return dh, dt
+    if ring is None:
+        dt = jax.lax.dot_general(
+            dlogits.reshape(-1, v), h.reshape(-1, d),
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        dt = M.psum_scatter(dt, axes.z, dim=1)
+    else:
+        dt = CMM.rs_matmul_tied_dt(dlogits.reshape(-1, v),
+                                   h.reshape(-1, d), ring,
+                                   block_w=table.shape[1],
+                                   chunks=ov.z_chunks)
+    return dh, dt.astype(table.dtype)
 
 
 tied_lm_logits.defvjp(lambda h, t, axes: _tied_fwd(h, t, axes), _tied_bwd)

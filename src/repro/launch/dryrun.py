@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED, SHAPES, get_config, skip_reason
+from repro.core.overlap import OverlapConfig
 from repro.core.partition import spec_tree_to_pspecs
 from repro.launch import mesh as LM
 from repro.launch import roofline as RL
@@ -80,7 +81,8 @@ def input_specs(cfg, axes, mesh, shape, *, seqshard=False):
 
 def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
                   overdecompose: int, xent_chunks: int, seqshard: bool,
-                  remat_policy: str = "full"):
+                  remat_policy: str = "full",
+                  overlap: OverlapConfig = OverlapConfig()):
     """Lower the step for this shape kind; returns the Lowered object."""
     ins = input_specs(cfg, axes, mesh, shape, seqshard=seqshard)
     if shape.kind == "train":
@@ -88,7 +90,7 @@ def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
             cfg, mesh, axes, OPT.AdamWConfig(),
             ST.TrainOptions(overdecompose=overdecompose,
                             xent_chunks=xent_chunks, unroll_layers=unroll,
-                            remat_policy=remat_policy))
+                            remat_policy=remat_policy, overlap=overlap))
         params, _ = ST.init_model(cfg, axes, abstract=True)
         params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
                               params, pspecs)
@@ -97,7 +99,8 @@ def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
             lambda st, sp: _sharded_struct(mesh, st, sp), state, spspecs)
         return step.lower(params, sstructs, ins)
     if shape.kind == "prefill":
-        build, pspecs = ST.make_prefill_step(cfg, mesh, axes, unroll=unroll)
+        build, pspecs = ST.make_prefill_step(cfg, mesh, axes, unroll=unroll,
+                                             overlap=overlap)
         fn, bt, ct = build(shape.global_batch, shape.seq_len, shape.seq_len)
         params, _ = ST.init_model(cfg, axes, abstract=True)
         params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
@@ -105,7 +108,7 @@ def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
         caches = _tree_structs(mesh, ct)
         return fn.lower(params, caches, ins)
     build, pspecs = ST.make_decode_step(cfg, mesh, axes, seqshard=seqshard,
-                                        unroll=unroll)
+                                        unroll=unroll, overlap=overlap)
     fn, ct = build(shape.global_batch, shape.seq_len)
     params, _ = ST.init_model(cfg, axes, abstract=True)
     params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
@@ -163,9 +166,15 @@ def _combine(base, deltas):
 def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               multi_pod: bool = False, xent_chunks: int = 0,
               overdecompose: int = 1, factors=None, probe: bool = True,
-              remat_policy: str = "full", cache_gather: bool = False):
-    from repro.core import parallel as _PP
-    _PP.CACHE_WEIGHT_GATHER = cache_gather
+              remat_policy: str = "full", cache_gather: bool = False,
+              overlap: bool = False, z_chunks: int = 1):
+    # z_chunks only means something on the ring path; normalize so the
+    # record (and the resume cache key built from it) never claims a
+    # config the lowering didn't use
+    z_chunks = z_chunks if overlap else 1
+    ov = (OverlapConfig.all_on(z_chunks=z_chunks,
+                               cache_weight_gather=cache_gather)
+          if overlap else OverlapConfig(cache_weight_gather=cache_gather))
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     seqshard = shape.seqshard
@@ -178,7 +187,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
     else:
         if factors is None:
             factors = choose_factors(cfg, shape,
-                                     pods=2 if multi_pod else 1)
+                                     pods=2 if multi_pod else 1,
+                                     overlap=ov if overlap else None)
         mesh = LM.make_production_mesh_4d(*factors, multi_pod=multi_pod)
         axes = LM.bind_4d(mesh)
     cfg.validate_axes(axes)
@@ -187,7 +197,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         xent_chunks = 4 if cfg.vocab_size >= 100_000 else 1
     n_dev = mesh.devices.size
     kw = dict(overdecompose=overdecompose, xent_chunks=xent_chunks,
-              seqshard=seqshard, remat_policy=remat_policy)
+              seqshard=seqshard, remat_policy=remat_policy, overlap=ov)
 
     # (1) the REAL scan-based program: must lower+compile; memory analysis
     t0 = time.time()
@@ -222,10 +232,17 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
     dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
               key=lambda x: x[1])[0]
     mf = RL.model_flops_per_device(cfg, shape, n_dev)
+    # overlap-aware step-time estimate: collective-permute traffic (the
+    # ring-decomposed z collectives) hides under compute, the rest is
+    # exposed (launch/roofline.step_time_estimate)
+    est = RL.step_time_estimate(terms["flops"], terms["coll"])
     roof = {
         "flops": terms["flops"], "hbm_bytes": terms["hbm"],
         "collective_bytes": coll_total,
         "compute_t": ct, "memory_t": mt, "collective_t": lt,
+        "exposed_collective_t": est.exposed_comm,
+        "hidden_collective_t": est.hidden_comm,
+        "step_time_est": est.total,
         "dominant": dom, "model_flops": mf,
         "useful_ratio": (mf / terms["flops"] if terms["flops"] else 0.0),
         "collectives": terms["coll"],
@@ -238,6 +255,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
                     "g_y": factors[2], "g_z": factors[3]},
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
+        "overlap": overlap, "z_chunks": z_chunks,
         "compile_s": round(compile_s, 1), "probe_s": round(probe_s, 1),
         "memory": mem,
         "roofline": roof,
@@ -257,8 +275,13 @@ def _feasible(cfg, factors, multi_pod=False):
         return False
 
 
-def choose_factors(cfg, shape, pods: int = 1):
+def choose_factors(cfg, shape, pods: int = 1,
+                   overlap: OverlapConfig = None):
     """Communication-model-optimal (g_data, g_x, g_y, g_z) for this pair.
+
+    With ``overlap`` set, ranks by the α-β overlap-aware
+    ``predict_step_time`` (ring-hidden z traffic makes z-heavier factors
+    cheaper); otherwise by the paper's volume model.
 
     long_500k (global_batch=1, cache seq-sharded over data) lifts the
     batch-divisibility constraint; decode shapes fix g_z=1 (the z axis is
@@ -288,9 +311,12 @@ def choose_factors(cfg, shape, pods: int = 1):
     # inference shapes have no gradient all-reduce: drop the data-parallel
     # term so the model maximizes dp (subject to the memory floor) instead
     # of being penalized for it (§Perf pair 2/3 iteration)
+    obj = {}
+    if overlap is not None and overlap.any_enabled:
+        obj = dict(objective="time", overlap=overlap)
     ranked = CM.optimize_decomposition(
         list(cfg.comm_layers()), tokens, 256, cons, top_k=64,
-        include_data_parallel=(shape.kind == "train"))
+        include_data_parallel=(shape.kind == "train"), **obj)
     for d, _ in ranked:
         f = (d.g_data, d.g_x, d.g_y, d.g_z)
         if _feasible(cfg, f, multi_pod=(pods > 1)):
@@ -322,6 +348,10 @@ def main():
                     help="run single-pod AND multi-pod")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--overdecompose", type=int, default=1)
+    ap.add_argument("--overlap", action="store_true",
+                    help="ring-decomposed collective matmuls (overlapped "
+                         "z-axis schedule)")
+    ap.add_argument("--z-chunks", type=int, default=1)
     ap.add_argument("--no-probe", action="store_true",
                     help="skip depth-probe lowerings (multi-pod pass: the "
                          "compile proof only, roofline terms from the "
@@ -334,6 +364,7 @@ def main():
     meshes = (["baseline-1d", "tensor4d"] if args.mesh == "both"
               else [args.mesh])
     pods = [False, True] if args.both_pods else [args.multi_pod]
+    z_chunks = args.z_chunks if args.overlap else 1  # inert without ring
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -343,7 +374,9 @@ def main():
                 try:
                     r = json.loads(line)
                     done.add((r["arch"], r["shape"], r["mesh"],
-                              r["multi_pod"], r.get("overdecompose", 1)))
+                              r["multi_pod"], r.get("overdecompose", 1),
+                              r.get("overlap", False),
+                              r.get("z_chunks", 1)))
                 except Exception:
                     pass
 
@@ -355,16 +388,18 @@ def main():
                 continue
             for mk in meshes:
                 for mp in pods:
-                    key = (arch, shape, mk, mp, args.overdecompose)
+                    key = (arch, shape, mk, mp, args.overdecompose,
+                           args.overlap, z_chunks)
                     if key in done:
                         print(f"cached {key}")
                         continue
-                    print(f"=== {arch} {shape} {mk} multi_pod={mp}",
-                          flush=True)
+                    print(f"=== {arch} {shape} {mk} multi_pod={mp} "
+                          f"overlap={args.overlap}", flush=True)
                     try:
                         rec, compiled = lower_one(
                             arch, shape, mk, multi_pod=mp,
                             overdecompose=args.overdecompose,
+                            overlap=args.overlap, z_chunks=z_chunks,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -377,6 +412,8 @@ def main():
                         rec = {"arch": arch, "shape": shape, "mesh": mk,
                                "multi_pod": mp,
                                "overdecompose": args.overdecompose,
+                               "overlap": args.overlap,
+                               "z_chunks": z_chunks,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

@@ -19,12 +19,12 @@ from typing import Optional, Tuple
 import jax
 
 from repro.core import mesh as M
+from repro.core import compat as C
 
 
 def _mk(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(names))
+    return C.make_mesh(shape, names,
+                       axis_types=C.default_axis_types(len(names)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -21,9 +21,19 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-PEAK_FLOPS = 197e12
+from repro.core import comm_model as CM
+
+# single source of truth for the chip constants is comm_model.TPU_V5E
+# (ROADMAP: calibrate HardwareParams against real-TPU timings; deriving
+# here keeps the analytic model and the HLO roofline in lockstep)
+PEAK_FLOPS = CM.TPU_V5E.flops
 HBM_BW = 819e9
-ICI_BW = 50e9
+ICI_BW = CM.TPU_V5E.link_bw
+
+# what the compiled-HLO step-time estimate treats as overlappable: the
+# ring-decomposed z collectives lower to collective-permute chains whose
+# hops interleave with the per-chunk GEMMs; everything else blocks
+OVERLAPPABLE_COLLECTIVES = ("collective-permute",)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -104,6 +114,28 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(counts, vol)
 
 
+def step_time_estimate(flops: float, bytes_by_kind: Dict[str, float], *,
+                       hw: Optional[CM.HardwareParams] = None
+                       ) -> CM.StepTime:
+    """Overlap-aware step-time estimate from compiled-HLO roofline terms.
+
+    The analytic twin is ``comm_model.predict_step_time`` (closed-form
+    shapes); this one prices the *measured* per-device collective bytes:
+    collective-permute traffic (the ring-decomposed z collectives) hides
+    under up to ``overlap_efficiency`` of the compute time, blocking
+    collectives are fully exposed."""
+    hw = hw or CM.TPU_V5E
+    compute_t = flops / hw.flops
+    hid_b = sum(v for k, v in bytes_by_kind.items()
+                if k in OVERLAPPABLE_COLLECTIVES)
+    exp_b = sum(v for k, v in bytes_by_kind.items()
+                if k not in OVERLAPPABLE_COLLECTIVES)
+    hid_t = hid_b / hw.link_bw
+    hidden = min(hid_t, hw.overlap_efficiency * compute_t)
+    exposed = exp_b / hw.link_bw + (hid_t - hidden)
+    return CM.StepTime(compute_t, exposed, hidden)
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float
@@ -112,6 +144,9 @@ class Roofline:
     compute_t: float
     memory_t: float
     collective_t: float
+    exposed_collective_t: float
+    hidden_collective_t: float
+    step_time_est: float
     dominant: str
     model_flops: float
     useful_ratio: float
@@ -145,12 +180,16 @@ def analyze(compiled, cfg, shape, n_devices: int) -> Roofline:
     ct = flops / PEAK_FLOPS
     mt = hbm / HBM_BW
     lt = stats.total_bytes / ICI_BW
+    est = step_time_estimate(flops, stats.bytes_by_kind)
     dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
               key=lambda kv: kv[1])[0]
     mf = model_flops_per_device(cfg, shape, n_devices)
     return Roofline(
         flops=flops, hbm_bytes=hbm, collective_bytes=stats.total_bytes,
-        compute_t=ct, memory_t=mt, collective_t=lt, dominant=dom,
+        compute_t=ct, memory_t=mt, collective_t=lt,
+        exposed_collective_t=est.exposed_comm,
+        hidden_collective_t=est.hidden_comm, step_time_est=est.total,
+        dominant=dom,
         model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
         collectives=stats.bytes_by_kind,
         collective_counts=stats.counts)

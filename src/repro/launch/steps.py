@@ -14,12 +14,13 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mesh as M
+from repro.core.compat import shard_map
 from repro.core import parallel as PP
 from repro.core.overdecompose import split_batch
+from repro.core.overlap import OverlapConfig
 from repro.core.partition import ParamSpec, spec_tree_to_pspecs, unbox, \
     z_reduce_grads
 from repro.models import decoder as D
@@ -97,6 +98,9 @@ class TrainOptions:
     dtype: Any = jnp.bfloat16
     unroll_layers: bool = False  # exact HLO costs for the dry-run
     mtp_weight: float = 0.0      # DeepSeek MTP loss weight (0 = off)
+    # ring-decomposed collective matmuls + weight-gather caching
+    # (core/overlap.py; rides down to the layers via axes.with_overlap)
+    overlap: OverlapConfig = OverlapConfig()
 
 
 def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions):
@@ -125,6 +129,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
 
     jitted_step(params, opt_state, batch) -> (params, opt_state, metrics).
     """
+    axes = axes.with_overlap(opts.overlap)
     _, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     pspecs = spec_tree_to_pspecs(specs)
     spspecs = OPT.state_pspecs(pspecs)
@@ -185,8 +190,10 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
 
 def make_decode_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
                      seqshard: bool = False, dtype=jnp.bfloat16,
-                     unroll: bool = False):
+                     unroll: bool = False,
+                     overlap: OverlapConfig = OverlapConfig()):
     """jitted(params, caches, tokens, pos) -> (logits, caches)."""
+    axes = axes.with_overlap(overlap)
     _, specs = init_model(cfg, axes, abstract=True, dtype=dtype)
     pspecs = spec_tree_to_pspecs(specs)
     bspec = axes.pspec(axes.batch_axes(), None)
@@ -201,7 +208,6 @@ def make_decode_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
         def step(params, caches, tokens, pos):
             return D.decode_step(params, cfg, axes, tokens, caches, pos,
                                  seqshard=seqshard, unroll=unroll)
-        cache_tree = None  # caller provides cache specs
 
     def cspecs(batch_global, seq):
         if cfg.arch_type == "audio":
@@ -226,8 +232,10 @@ def make_decode_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
 
 
 def make_prefill_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
-                      dtype=jnp.bfloat16, unroll: bool = False):
+                      dtype=jnp.bfloat16, unroll: bool = False,
+                      overlap: OverlapConfig = OverlapConfig()):
     """jitted(params, caches, batch) -> (last_logits, caches)."""
+    axes = axes.with_overlap(overlap)
     _, specs = init_model(cfg, axes, abstract=True, dtype=dtype)
     pspecs = spec_tree_to_pspecs(specs)
 

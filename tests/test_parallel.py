@@ -5,11 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import mesh as M
 from repro.core import parallel as PP
+from repro.core.compat import default_axis_types, make_mesh, shard_map
 
 K, N, B, S = 16, 24, 8, 8
 
@@ -60,8 +60,8 @@ MESHES = [
 @pytest.mark.parametrize("shape,names,bind", MESHES,
                          ids=[str(m[0]) + str(m[2].get("x")) for m in MESHES])
 def test_tp_matches_dense(shape, names, bind, data):
-    mesh = jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    mesh = make_mesh(shape, names,
+                     axis_types=default_axis_types(len(names)))
     axes = M.bind_axes(mesh, **bind)
     ref_val, ref_grads = _ref(data)
 

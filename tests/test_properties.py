@@ -4,7 +4,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in image)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import comm_model as CM
 from repro.data.synthetic import DataConfig, SyntheticText

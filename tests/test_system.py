@@ -72,7 +72,7 @@ def test_prefill_then_decode_consistent():
     """Prefill+decode must give the same next-token logits as running the
     full sequence through the train-mode forward."""
     from repro.models import decoder as D
-    from jax import shard_map
+    from repro.core.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh = LM.make_smoke_mesh((2, 2, 2, 1))
