@@ -121,45 +121,74 @@ def overlap_collectives(steps: int = 4) -> List[Tuple[str, float, str]]:
     """Ring-decomposed collective matmuls, before/after on the dry-run HLO
     (paper §4: overlap collectives with computation *inside* each layer).
 
-    Lowers the same train step on a (1, 2, 2, 2) mesh with the blocking
-    and the overlapped z-axis schedule, then reports: collective op
-    counts (ring mode must replace the monolithic weight all-gather /
-    reduce-scatter with collective-permute chains), the overlap-aware
-    exposed-communication estimate (must fall), wall-clock per step, and
-    the loss gap after a few real steps (must be ~fp32-accum noise)."""
+    Lowers the same train step with the blocking schedule, the overlapped
+    z-axis weight schedule (ring_z), and additionally the x/y activation
+    all-reduce rings (ring_xy == OverlapConfig.all_on()), then reports:
+    collective op counts (ring_z must replace the monolithic weight
+    all-gather / reduce-scatter with collective-permute chains; ring_xy
+    must additionally replace matmul all-reduces with permute chains),
+    the overlap-aware exposed-communication estimate (must fall),
+    wall-clock per step, and the loss gap after a few real steps (must be
+    ~fp32-accum noise). Each config is compiled ONCE via
+    ``lower().compile()``; the same executable serves the HLO stats and
+    the timing loop. Per-mode optimized HLO is dumped to
+    ``runs/bench_hlo/`` so CI can archive the before/after programs."""
+    import os
+
     from repro.core.overlap import OverlapConfig
     from repro.launch import roofline as RL
 
+    # the 8-device mesh exercises x, y and z rings at once; 4 host
+    # devices keep y (activation) and z (weight) rings
+    shape = (1, 2, 2, 2) if jax.device_count() >= 8 else (1, 1, 2, 2)
+    hlo_dir = os.path.join("runs", "bench_hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
     rows = []
     losses = {}
-    for name, ov in [("blocking", None),
-                     ("ring", OverlapConfig.all_on()),
-                     ("ring_c2", OverlapConfig.all_on(z_chunks=2))]:
+    counts = {}
+    modes = [
+        ("blocking", None),
+        ("ring_z", OverlapConfig(matmul=True, batched_matmul=True,
+                                 tied_logits=True)),
+        ("ring_xy", OverlapConfig.all_on()),
+        ("ring_c2", OverlapConfig.all_on(z_chunks=2, ar_chunks=2)),
+    ]
+    for name, ov in modes:
         cfg, fn, params, state, batch = _train_setup(
-            "stablelm-1.6b", (1, 2, 2, 2), steps=steps, B=8, S=64,
-            overlap=ov)
+            "stablelm-1.6b", shape, steps=steps, B=8, S=64, overlap=ov)
         compiled = fn.lower(params, state, batch).compile()
-        stats = RL.parse_collectives(compiled.as_text())
+        hlo = compiled.as_text()
+        with open(os.path.join(hlo_dir, f"overlap_{name}.hlo.txt"),
+                  "w") as f:
+            f.write(hlo)
+        stats = RL.parse_collectives(hlo)
         cost = compiled.cost_analysis()
         if isinstance(cost, list):
             cost = cost[0]
         est = RL.step_time_estimate(float(cost.get("flops", 0.0)),
                                     stats.bytes_by_kind)
-        params, state, m = fn(params, state, batch)  # compile+warmup
+        params, state, m = compiled(params, state, batch)  # warmup
         t0 = time.time()
         for _ in range(steps):
-            params, state, m = fn(params, state, batch)
+            params, state, m = compiled(params, state, batch)
         jax.block_until_ready(m["loss"])
         us = (time.time() - t0) / steps * 1e6
         losses[name] = float(m["loss"])
-        c = stats.counts
+        c = counts[name] = stats.counts
         rows.append((
             f"overlap/{name}", us,
-            f"ag={c.get('all-gather', 0)} rs={c.get('reduce-scatter', 0)} "
+            f"ar={c.get('all-reduce', 0)} ag={c.get('all-gather', 0)} "
+            f"rs={c.get('reduce-scatter', 0)} "
             f"cp={c.get('collective-permute', 0)} "
             f"exposed_us={est.exposed_comm * 1e6:.1f} "
             f"hidden_us={est.hidden_comm * 1e6:.1f} "
             f"loss={losses[name]:.4f}"))
+    # the x/y mode must convert matmul all-reduces into permute chains
+    # (norm/softmax scalar psums legitimately stay blocking)
+    assert (counts["ring_xy"].get("all-reduce", 0)
+            < counts["blocking"].get("all-reduce", 0)), counts
+    assert (counts["ring_xy"].get("collective-permute", 0)
+            > counts["ring_z"].get("collective-permute", 0)), counts
     gap = max(abs(losses[k] - losses["blocking"]) for k in losses)
     assert gap < 1e-3, f"overlapped schedule changed the loss: {gap}"
     rows.append(("overlap/loss_gap", gap, "ring vs blocking, fp32"))

@@ -15,7 +15,7 @@ Ring convention (matches core/mesh ring helpers and the TPU RDMA idiom):
 send right (rank i -> i+1), so after ``s`` hops rank ``i`` holds the block
 originally owned by rank ``(i - s) mod p``.
 
-Three dataflow patterns cover every z collective on the hot path:
+Four dataflow patterns cover every x/y/z collective on the hot path:
 
   * place      — gathered dim is the GEMM's *output* dim:
                  ``out[..., slot_j] = mm(block_j)``            (AG-matmul)
@@ -24,26 +24,32 @@ Three dataflow patterns cover every z collective on the hot path:
   * reduce-scatter — scatter dim is the GEMM's output dim:
                  partial sums ride the ring, each rank's GEMM contribution
                  is added just-in-time                         (RS-matmul)
+  * all-reduce — the x/y *activation* all-reduce of a tp matmul as a
+                 reduce-scatter ring fed per-chunk by the producing GEMM,
+                 then an all-gather ring                       (AR-matmul)
 
 ``chunks > 1`` splits each per-rank block into independent sub-rings for
-finer-grained permute/GEMM pairs (OverlapConfig.z_chunks).
+finer-grained permute/GEMM pairs (OverlapConfig.z_chunks / ar_chunks).
 
 All drivers accumulate in fp32 (``preferred_element_type``), so results
 match the blocking schedule within fp32-accumulation reassociation only.
-Only single-name mesh axes take the fused path (callers fall back to the
-blocking schedule for tuple axes); ``p == 1`` degrades to the plain local
-GEMM with zero collectives.
+Tuple (multi-name) mesh axes ring once over the flattened group — the
+same FIRST-name-major linearization as a PartitionSpec tuple and
+core/mesh's blocking helpers, so layouts stay interchangeable; ``p == 1``
+degrades to the plain local GEMM with zero collectives.
 """
 from __future__ import annotations
 
-from typing import Callable, List
+from typing import Callable, List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.compat import axis_size
-from repro.core.mesh import ring_perm as _ring_perm
+from repro.core.mesh import flat_ring_axis, flat_ring_index, \
+    ring_all_gather, ring_perm as _ring_perm
+
+AxisRef = Union[str, Tuple[str, ...]]
 
 
 def effective_chunks(width: int, chunks: int) -> int:
@@ -58,7 +64,7 @@ def effective_chunks(width: int, chunks: int) -> int:
 # generic drivers
 # ---------------------------------------------------------------------- #
 
-def ring_place(block, name: str, mm: Callable, *, gdim: int,
+def ring_place(block, name: AxisRef, mm: Callable, *, gdim: int,
                chunks: int = 1):
     """``concat_j mm(block_of_rank_j)`` along the output's last dim.
 
@@ -67,10 +73,10 @@ def ring_place(block, name: str, mm: Callable, *, gdim: int,
     in slice order within the slot (identical to the blocking
     gather-then-GEMM layout).
     """
-    p = axis_size(name)
+    p, axn = flat_ring_axis(name)
     if p == 1:
         return mm(block)
-    idx = lax.axis_index(name)
+    idx = flat_ring_index(name)
     perm = _ring_perm(p)
     gdim = gdim % block.ndim
     chunks = effective_chunks(block.shape[gdim], chunks)
@@ -91,12 +97,12 @@ def ring_place(block, name: str, mm: Callable, *, gdim: int,
             out = lax.dynamic_update_slice_in_dim(
                 out, y, (j * chunks + q) * piece_w, axis=-1)
             if s < p - 1:
-                nxt.append(lax.ppermute(cur, name, perm))
+                nxt.append(lax.ppermute(cur, axn, perm))
         curs = nxt
     return out
 
 
-def ring_accumulate(lhs, block, name: str, mm: Callable, *, gdim: int,
+def ring_accumulate(lhs, block, name: AxisRef, mm: Callable, *, gdim: int,
                     ldim: int = -1, chunks: int = 1):
     """``sum_j mm(lhs_seg_j, block_of_rank_j)`` — gathered contraction.
 
@@ -104,10 +110,10 @@ def ring_accumulate(lhs, block, name: str, mm: Callable, *, gdim: int,
     blocks: rank j's piece q contracts with ``lhs[..., (j*chunks+q)*m :]``.
     ``mm`` must return fp32 (partials are summed across the ring).
     """
-    p = axis_size(name)
+    p, axn = flat_ring_axis(name)
     if p == 1:
         return mm(lhs, block)
-    idx = lax.axis_index(name)
+    idx = flat_ring_index(name)
     perm = _ring_perm(p)
     gdim = gdim % block.ndim
     ldim = ldim % lhs.ndim
@@ -126,12 +132,12 @@ def ring_accumulate(lhs, block, name: str, mm: Callable, *, gdim: int,
             y = mm(seg, cur)
             acc = y if acc is None else acc + y
             if s < p - 1:
-                nxt.append(lax.ppermute(cur, name, perm))
+                nxt.append(lax.ppermute(cur, axn, perm))
         curs = nxt
     return acc
 
 
-def ring_reduce_scatter_mm(name: str, mm: Callable, *, block_w: int,
+def ring_reduce_scatter_mm(name: AxisRef, mm: Callable, *, block_w: int,
                            chunks: int = 1):
     """Fused ``psum_scatter(full_contribution, name, dim=-1)`` where the
     full contribution never materializes.
@@ -142,10 +148,10 @@ def ring_reduce_scatter_mm(name: str, mm: Callable, *, block_w: int,
     for rank j is computed just-in-time as the running sum passes through
     (p GEMMs, p-1 permutes per sub-ring).
     """
-    p = axis_size(name)
+    p, axn = flat_ring_axis(name)
     if p == 1:
         return mm(jnp.int32(0), block_w)
-    idx = lax.axis_index(name)
+    idx = flat_ring_index(name)
     perm = _ring_perm(p)
     chunks = effective_chunks(block_w, chunks)
     m = block_w // chunks
@@ -156,17 +162,47 @@ def ring_reduce_scatter_mm(name: str, mm: Callable, *, block_w: int,
             j = (idx - s) % p
             g = mm(j * block_w + q * m, m)
             part = g if recv is None else recv + g
-            recv = lax.ppermute(part, name, perm)
+            recv = lax.ppermute(part, axn, perm)
         g = mm(idx * block_w + q * m, m)
         outs.append(g if recv is None else recv + g)
     return outs[0] if chunks == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def ring_all_reduce_mm(name: AxisRef, mm: Callable, *, out_w: int,
+                       dtype, chunks: int = 1):
+    """Fused ``psum(full_mm_output, name)`` where the output is produced
+    chunk by chunk, just in time for its reduce-scatter hop, then rebuilt
+    by an all-gather ring (the decomposed activation all-reduce, AxoNN
+    arXiv:2110.13005).
+
+    ``mm(start, width) -> fp32 (..., width)`` computes this rank's
+    partial for slice ``[start, start+width)`` of the reduced dim;
+    ``out_w`` is that dim's full width. Partials are summed in fp32
+    across the scatter ring and cast to ``dtype`` before the (pure data
+    movement) gather ring, mirroring the blocking GEMM→cast→psum order.
+    p == 2 takes the bidirectional-exchange fast path (one full-width
+    GEMM + one hop each way; bitwise psum — two-term fp addition
+    commutes); rings that do not split ``out_w`` evenly fall back to the
+    blocking psum.
+    """
+    p, axn = flat_ring_axis(name)
+    if p == 1:
+        return mm(jnp.int32(0), out_w).astype(dtype)
+    if p == 2:
+        y = mm(jnp.int32(0), out_w).astype(dtype)
+        return y + lax.ppermute(y, axn, _ring_perm(2))
+    if out_w % p:
+        return jax.lax.psum(mm(jnp.int32(0), out_w).astype(dtype), name)
+    scat = ring_reduce_scatter_mm(name, mm, block_w=out_w // p,
+                                  chunks=chunks).astype(dtype)
+    return ring_all_gather(scat, name, dim=-1)
 
 
 # ---------------------------------------------------------------------- #
 # concrete overlapped primitives (called from core/parallel.py)
 # ---------------------------------------------------------------------- #
 
-def ag_matmul(x, w, name: str, *, chunks: int = 1):
+def ag_matmul(x, w, name: AxisRef, *, chunks: int = 1):
     """``x @ AG_name(w, dim=1)`` (fwd of tp_matmul), ring-overlapped.
 
     x (..., k); w (k, n_loc). Returns (..., p*n_loc) in x.dtype."""
@@ -177,7 +213,7 @@ def ag_matmul(x, w, name: str, *, chunks: int = 1):
     return ring_place(w, name, mm, gdim=1, chunks=chunks)
 
 
-def ag_matmul_batched(x, w, name: str, *, chunks: int = 1):
+def ag_matmul_batched(x, w, name: AxisRef, *, chunks: int = 1):
     """Per-expert fwd: x (E, C, k) @ AG_name(w (E, k, n_loc), dim=2)."""
     def mm(wb):
         return lax.dot_general(
@@ -186,7 +222,7 @@ def ag_matmul_batched(x, w, name: str, *, chunks: int = 1):
     return ring_place(w, name, mm, gdim=2, chunks=chunks)
 
 
-def accum_matmul_dx(dy, w, name: str, *, chunks: int = 1):
+def accum_matmul_dx(dy, w, name: AxisRef, *, chunks: int = 1):
     """``dy @ AG_name(w, dim=1)^T`` (bwd dX of tp_matmul) without
     materializing the gathered weight. Returns fp32 (..., k)."""
     def mm(seg, wb):
@@ -196,7 +232,7 @@ def accum_matmul_dx(dy, w, name: str, *, chunks: int = 1):
     return ring_accumulate(dy, w, name, mm, gdim=1, chunks=chunks)
 
 
-def accum_matmul_dx_batched(dy, w, name: str, *, chunks: int = 1):
+def accum_matmul_dx_batched(dy, w, name: AxisRef, *, chunks: int = 1):
     """Per-expert bwd dX: dy (E, C, n_use) x w (E, k, n_loc). fp32."""
     def mm(seg, wb):
         return lax.dot_general(
@@ -205,7 +241,7 @@ def accum_matmul_dx_batched(dy, w, name: str, *, chunks: int = 1):
     return ring_accumulate(dy, w, name, mm, gdim=2, chunks=chunks)
 
 
-def rs_matmul_dw(x2d, dy2d, name: str, *, block_w: int, chunks: int = 1):
+def rs_matmul_dw(x2d, dy2d, name: AxisRef, *, block_w: int, chunks: int = 1):
     """``RS_name(x^T @ dy, dim=1)`` (bwd dW of tp_matmul) fused: each
     rank's (k, block) GEMM slice is computed as the ring partial for that
     block passes through. x2d (T, k); dy2d (T, n_use). Returns fp32
@@ -218,7 +254,7 @@ def rs_matmul_dw(x2d, dy2d, name: str, *, block_w: int, chunks: int = 1):
     return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)
 
 
-def rs_matmul_dw_batched(x, dy, name: str, *, block_w: int,
+def rs_matmul_dw_batched(x, dy, name: AxisRef, *, block_w: int,
                          chunks: int = 1):
     """Per-expert bwd dW: RS over dim 2 of x (E,C,k)^T @ dy (E,C,n_use)."""
     def mm(start, width):
@@ -229,7 +265,7 @@ def rs_matmul_dw_batched(x, dy, name: str, *, block_w: int,
     return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)
 
 
-def accum_matmul_tied(h, table, name: str, *, chunks: int = 1):
+def accum_matmul_tied(h, table, name: AxisRef, *, chunks: int = 1):
     """Tied LM head fwd: ``h @ AG_name(table, dim=1)^T`` — the gathered
     dim is the contraction (d) dim. h (..., d/x); table (V/y, d_loc).
     Returns fp32 (..., V/y)."""
@@ -240,7 +276,7 @@ def accum_matmul_tied(h, table, name: str, *, chunks: int = 1):
     return ring_accumulate(h, table, name, mm, gdim=1, chunks=chunks)
 
 
-def ag_matmul_tied_dh(dlogits, table, name: str, *, chunks: int = 1):
+def ag_matmul_tied_dh(dlogits, table, name: AxisRef, *, chunks: int = 1):
     """Tied LM head bwd dh: ``dlogits @ AG_name(table, dim=1)`` — the
     gathered dim is the *output* (d) dim. Returns (..., d/x) fp32."""
     def mm(tb):
@@ -250,7 +286,7 @@ def ag_matmul_tied_dh(dlogits, table, name: str, *, chunks: int = 1):
     return ring_place(table, name, mm, gdim=1, chunks=chunks)
 
 
-def rs_matmul_tied_dt(dl2d, h2d, name: str, *, block_w: int,
+def rs_matmul_tied_dt(dl2d, h2d, name: AxisRef, *, block_w: int,
                       chunks: int = 1):
     """Tied LM head bwd dtable: ``RS_name(dlogits^T @ h, dim=1)`` fused.
     dl2d (T, V/y); h2d (T, d/x). Returns fp32 (V/y, block_w)."""
@@ -260,3 +296,60 @@ def rs_matmul_tied_dt(dl2d, h2d, name: str, *, block_w: int,
             dl2d, seg, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
     return ring_reduce_scatter_mm(name, mm, block_w=block_w, chunks=chunks)
+
+
+# ---------------------------------------------------------------------- #
+# decomposed x/y activation all-reduces (called from core/parallel.py)
+# ---------------------------------------------------------------------- #
+
+def ar_matmul(x, w, name: AxisRef, *, chunks: int = 1):
+    """``psum_name(x @ w)`` (fwd of tp_matmul / tied-head bwd dh) with the
+    activation all-reduce decomposed into a fused RS-matmul ring + AG
+    ring: the GEMM produces each output slice just in time for its
+    reduce-scatter hop. x (..., c); w (c, n). Returns (..., n), x.dtype."""
+    def mm(start, width):
+        wseg = lax.dynamic_slice_in_dim(w, start, width, axis=1)
+        return lax.dot_general(
+            x, wseg, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_all_reduce_mm(name, mm, out_w=w.shape[1], dtype=x.dtype,
+                              chunks=chunks)
+
+
+def ar_matmul_t(x, w, name: AxisRef, *, chunks: int = 1):
+    """``psum_name(x @ w^T)`` — transposed rhs: the reduced output dim
+    indexes ``w``'s *rows* (bwd dX of tp_matmul against the gathered
+    weight; fwd of the tied head against the embedding table).
+    x (..., c); w (n, c). Returns (..., n), x.dtype."""
+    def mm(start, width):
+        wseg = lax.dynamic_slice_in_dim(w, start, width, axis=0)
+        return lax.dot_general(
+            x, wseg, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return ring_all_reduce_mm(name, mm, out_w=w.shape[0], dtype=x.dtype,
+                              chunks=chunks)
+
+
+def ar_matmul_batched(x, w, name: AxisRef, *, chunks: int = 1):
+    """Per-expert ``psum_name(x @ w)``: x (E, C, c); w (E, c, n).
+    Returns (E, C, n), x.dtype."""
+    def mm(start, width):
+        wseg = lax.dynamic_slice_in_dim(w, start, width, axis=2)
+        return lax.dot_general(
+            x, wseg, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return ring_all_reduce_mm(name, mm, out_w=w.shape[2], dtype=x.dtype,
+                              chunks=chunks)
+
+
+def ar_matmul_batched_t(x, w, name: AxisRef, *, chunks: int = 1):
+    """Per-expert ``psum_name(x @ w^T)`` (bwd dX of tp_batched_matmul):
+    x (E, C, c); w (E, n, c) -- i.e. the gathered weight contracted over
+    its last dim. Returns (E, C, n), x.dtype."""
+    def mm(start, width):
+        wseg = lax.dynamic_slice_in_dim(w, start, width, axis=1)
+        return lax.dot_general(
+            x, wseg, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    return ring_all_reduce_mm(name, mm, out_w=w.shape[1], dtype=x.dtype,
+                              chunks=chunks)

@@ -16,13 +16,16 @@ bandwidth-optimal (Patarasuk & Yuan): ``V_AR = 2 (p-1)/p * buf``,
 
 Beyond the paper's volume-only ranking, the α-β *time* model
 (:class:`HardwareParams`, :func:`predict_step_time`) prices each
-collective as ``steps * α + bytes / bw`` and — when an
+collective as ``steps * α + bytes / bw`` (all-reduces at 2(p-1) ring
+hops, gathers/scatters at p-1) and — when an
 :class:`~repro.core.overlap.OverlapConfig` enables the ring-decomposed
-collective matmuls — hides the z-axis weight traffic under the layer's
-own GEMM time, charging only the *exposed* remainder. With α = 0 and
-overlap disabled the exposed-communication term reduces exactly to
+collective matmuls — hides the z-axis weight traffic (``matmul``) and
+then the x/y activation all-reduce traffic (``all_reduce``) under the
+layer's own GEMM time, charging only the *exposed* remainder. With α = 0
+and overlap disabled the exposed-communication term reduces exactly to
 ``model_volume * bytes_per_elem / bw``, so the volume model is the
-degenerate point of the time model.
+degenerate point of the time model (the shared :func:`layer_geometry`
+keeps the two in lockstep).
 """
 from __future__ import annotations
 
@@ -80,6 +83,44 @@ def gather_or_scatter_volume(p: int, full_buf: float) -> float:
     return 0.0 if p <= 1 else (p - 1) / p * full_buf
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerGeometry:
+    """Shared per-layer geometry of the volume and time models.
+
+    One source of truth for the axis-role swap, the local token count and
+    every collective's buffer size, consumed by both :func:`layer_volume`
+    and :func:`layer_time` — factored out so the α=0/no-overlap
+    degeneracy of the time model to the volume model cannot drift
+    (tests/test_overlap.py pins it).
+
+    ``gx``/``gy`` are the contraction/output axis sizes with the
+    transposed-layer role swap applied; buffers are in elements, with the
+    :func:`allreduce_volume` / :func:`gather_or_scatter_volume`
+    conventions.
+    """
+
+    gx: int
+    gy: int
+    m_local: float         # tokens hitting this layer, per (data x z) shard
+    ar_fwd_buf: float      # fwd partial-output all-reduce over gx (Eq. 2)
+    ar_bwd_buf: float      # bwd dX all-reduce over gy (Eq. 3)
+    w_full_per_xy: float   # z-collective buffer: full weight per x*y shard
+    n_gathers: int         # AG_z count (1 when the bwd re-gather is cached)
+
+
+def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
+                   overlap: Optional[OverlapConfig] = None) -> LayerGeometry:
+    gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
+    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
+    cached = bool(overlap and overlap.cache_weight_gather)
+    return LayerGeometry(
+        gx=gx, gy=gy, m_local=m_local,
+        ar_fwd_buf=m_local * ls.n / gy,
+        ar_bwd_buf=m_local * ls.k / gx,
+        w_full_per_xy=ls.k * ls.n / (d.g_x * d.g_y),
+        n_gathers=1 if cached else 2)
+
+
 def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
                  overlap: Optional[OverlapConfig] = None,
                  include_data_parallel: bool = True) -> float:
@@ -89,26 +130,23 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     ``g_z = 1`` specialization of this function.
 
     ``overlap.cache_weight_gather`` drops the backward re-gather of the
-    weight (one AG_z per layer). The ring decomposition itself moves the
-    same bytes as the blocking collectives, so the other overlap knobs do
-    not change *volume* — only :func:`predict_step_time` sees them.
+    weight (one AG_z per layer). The ring decompositions themselves move
+    the same bytes as the blocking collectives, so the other overlap knobs
+    do not change *volume* — only :func:`predict_step_time` sees them.
     """
-    gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
-    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
+    g = layer_geometry(ls, tokens, d, overlap)
     # fwd all-reduce of partial outputs over the contraction axis (Eq. 2)
-    v_fp = allreduce_volume(gx, m_local * ls.n / gy)
+    v_fp = allreduce_volume(g.gx, g.ar_fwd_buf)
     # bwd all-reduce of dX over the output axis (Eq. 3)
-    v_bp = allreduce_volume(gy, m_local * ls.k / gx)
+    v_bp = allreduce_volume(g.gy, g.ar_bwd_buf)
     # z-axis weight collectives (4D): AG fwd (+AG bwd if not cached) + RS bwd
-    w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
-    cached = bool(overlap and overlap.cache_weight_gather)
-    n_gathers = 1 if cached else 2
-    v_z = (n_gathers + 1) * gather_or_scatter_volume(d.g_z, w_full_per_xy)
+    v_z = (g.n_gathers + 1) * gather_or_scatter_volume(d.g_z,
+                                                       g.w_full_per_xy)
     # data-parallel gradient all-reduce (the text measures it as 1e-3 of the
     # tensor terms but we keep it for completeness)
     v_dp = 0.0
     if include_data_parallel:
-        v_dp = allreduce_volume(d.g_data, w_full_per_xy / d.g_z)
+        v_dp = allreduce_volume(d.g_data, g.w_full_per_xy / d.g_z)
     return ls.count * (v_fp + v_bp + v_z + v_dp)
 
 
@@ -225,34 +263,37 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     """Overlap-aware α-β time of one layer, fwd+bwd (cf. layer_volume).
 
     Compute: 3 GEMMs (fwd Y, bwd dX, bwd dW) of 2·m·k·n/(gx·gy) flops
-    each. The x/y activation all-reduces are blocking (overdecomposition
-    overlaps them *across* batch shards; that is a step-level effect the
-    dry-run measures, not modeled here). The z weight collectives are the
-    ring-decomposed ones: with ``overlap.matmul`` they hide under up to
-    ``overlap_efficiency`` of this layer's own compute."""
-    gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
-    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
-    t_compute = 6.0 * m_local * ls.k * ls.n / (gx * gy) / hw.flops
-    # blocking activation all-reduces (Eqs. 2-3)
-    t_act = (collective_time("all_reduce", gx, m_local * ls.n / gy, hw)
-             + collective_time("all_reduce", gy, m_local * ls.k / gx, hw))
+    each. The activation all-reduces are priced as 2(p-1)-hop rings
+    (Eqs. 2-3 buffers); with ``overlap.all_reduce`` their ring
+    decomposition hides under whatever part of the
+    ``overlap_efficiency``-scaled compute window the z weight rings
+    (``overlap.matmul``) left over — the z collectives hide first, since
+    their rings pipeline against the very GEMM that consumes/produces the
+    weight. Blocking mode keeps every collective fully exposed
+    (overdecomposition overlaps them *across* batch shards; that is a
+    step-level effect the dry-run measures, not modeled here)."""
+    g = layer_geometry(ls, tokens, d, overlap)
+    t_compute = 6.0 * g.m_local * ls.k * ls.n / (g.gx * g.gy) / hw.flops
+    # activation all-reduces (Eqs. 2-3): 2(p-1) α-β ring steps each
+    t_act = (collective_time("all_reduce", g.gx, g.ar_fwd_buf, hw)
+             + collective_time("all_reduce", g.gy, g.ar_bwd_buf, hw))
     # z-axis weight collectives (AG fwd [+AG bwd] + RS bwd)
-    w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
-    cached = bool(overlap and overlap.cache_weight_gather)
-    n_gathers = 1 if cached else 2
-    t_z = (n_gathers
-           * collective_time("all_gather", d.g_z, w_full_per_xy, hw)
-           + collective_time("reduce_scatter", d.g_z, w_full_per_xy, hw))
+    t_z = (g.n_gathers
+           * collective_time("all_gather", d.g_z, g.w_full_per_xy, hw)
+           + collective_time("reduce_scatter", d.g_z, g.w_full_per_xy, hw))
     t_dp = 0.0
     if include_data_parallel:
         t_dp = collective_time("all_reduce", d.g_data,
-                               w_full_per_xy / d.g_z, hw)
-    if overlap is not None and overlap.matmul and d.g_z > 1:
-        window = hw.overlap_efficiency * t_compute
-        hidden = min(t_z, window)
-    else:
-        hidden = 0.0
-    exposed = t_act + (t_z - hidden) + t_dp
+                               g.w_full_per_xy / d.g_z, hw)
+    window = hw.overlap_efficiency * t_compute
+    hidden_z = (min(t_z, window)
+                if overlap is not None and overlap.matmul and d.g_z > 1
+                else 0.0)
+    hidden_ar = (min(t_act, window - hidden_z)
+                 if overlap is not None and overlap.all_reduce
+                 else 0.0)
+    hidden = hidden_z + hidden_ar
+    exposed = t_act + t_z + t_dp - hidden
     return StepTime(ls.count * t_compute, ls.count * exposed,
                     ls.count * hidden)
 

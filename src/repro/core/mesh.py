@@ -123,13 +123,27 @@ class MeshAxes:
 
 def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
               y: AxisName = None, z: AxisName = None) -> MeshAxes:
-    """Bind logical 4D axes to a physical mesh, validating names."""
+    """Bind logical 4D axes to a physical mesh, validating names.
+
+    Tuple axes must list their names in mesh-axis order: the flattened
+    ring helpers (:func:`flat_ring_axis`) and ``lax.ppermute``'s group
+    numbering (sorted global device ids == mesh order) agree only then —
+    out-of-order tuples would silently route ring hops to the wrong
+    ranks."""
     sizes = tuple(zip(mesh.axis_names, mesh.devices.shape))
     known = dict(sizes)
+    order = {name: i for i, name in enumerate(mesh.axis_names)}
     for a in (data, x, y, z):
-        for n in _names(a):
-            if n not in known:
-                raise ValueError(f"axis {n!r} not in mesh axes {mesh.axis_names}")
+        n = _names(a)
+        for name in n:
+            if name not in known:
+                raise ValueError(
+                    f"axis {name!r} not in mesh axes {mesh.axis_names}")
+        pos = [order[name] for name in n]
+        if pos != sorted(pos):
+            raise ValueError(
+                f"tuple axis {n!r} must list names in mesh-axis order "
+                f"{mesh.axis_names} (ring collectives linearize by it)")
     return MeshAxes(data=data, x=x, y=y, z=z, sizes=sizes)
 
 
@@ -149,21 +163,26 @@ def pmax(v, axis: AxisName):
 
 
 def all_gather(v, axis: AxisName, *, dim: int, tiled: bool = True):
-    n = _names(axis)
-    if not n:
-        return v
-    out = v
-    for name in n:
-        out = jax.lax.all_gather(out, name, axis=dim, tiled=tiled)
-    return out
-
-
-def psum_scatter(v, axis: AxisName, *, dim: int, tiled: bool = True):
+    """Tiled all-gather; tuple axes gather minor name first so the result
+    blocks land FIRST-name-major — the order a PartitionSpec tuple shards
+    the global dim, and the flattened-ring layout of the ring helpers."""
     n = _names(axis)
     if not n:
         return v
     out = v
     for name in reversed(n):
+        out = jax.lax.all_gather(out, name, axis=dim, tiled=tiled)
+    return out
+
+
+def psum_scatter(v, axis: AxisName, *, dim: int, tiled: bool = True):
+    """Tiled reduce-scatter; tuple axes scatter major name first (the
+    exact inverse of :func:`all_gather`'s first-name-major layout)."""
+    n = _names(axis)
+    if not n:
+        return v
+    out = v
+    for name in n:
         out = jax.lax.psum_scatter(out, name, scatter_dimension=dim, tiled=tiled)
     return out
 
@@ -177,26 +196,56 @@ def ring_perm(p: int, shift: int = 1):
     return [(i, (i + shift) % p) for i in range(p)]
 
 
+def flat_ring_axis(axis: AxisName):
+    """(p, ppermute axis arg) of the flattened ring over ``axis``.
+
+    Multi-name axes form ONE ring over the FIRST-name-major
+    linearization — the order a PartitionSpec tuple shards a dim, and
+    (since ``lax.ppermute`` numbers a multi-name group by sorted global
+    device id, i.e. by mesh-axis order) the order the permutation indices
+    actually route, provided the tuple lists its names in mesh-axis
+    order — which every :class:`MeshAxes` binding does. The blocking
+    :func:`all_gather` / :func:`psum_scatter` helpers produce the same
+    layout, so ring and blocking schedules stay interchangeable."""
+    n = _names(axis)
+    p = math.prod(_axis_size(name) for name in n)
+    return p, (n if len(n) > 1 else n[0])
+
+
+def flat_ring_index(axis: AxisName):
+    """This rank's position on the flattened (first-name-major) ring."""
+    return axis_index(axis)
+
+
 def ppermute_ring(v, axis: AxisName, shift: int = 1):
     """One ring hop: send to (i + shift) mod p along ``axis``.
 
     Identity on unmapped axes. Multi-name axes hop along the flattened
-    ring of the combined (row-major) index.
+    ring of :func:`flat_ring_axis`.
     """
     n = _names(axis)
     if not n:
         return v
-    p = math.prod(_axis_size(name) for name in n)
+    p, axn = flat_ring_axis(axis)
     if p == 1:
         return v
-    return jax.lax.ppermute(v, n if len(n) > 1 else n[0], ring_perm(p, shift))
+    return jax.lax.ppermute(v, axn, ring_perm(p, shift))
 
 
-def _ring_ag_one(v, name: str, dim: int):
-    p = _axis_size(name)
+def ring_all_gather(v, axis: AxisName, *, dim: int):
+    """``all_gather(tiled=True)`` decomposed into p-1 ``ppermute`` ring
+    steps (so XLA can overlap each hop with unrelated compute). Bitwise
+    the same result ordering as :func:`all_gather` (tuple axes ring once
+    over the flattened group instead of once per name — same layout,
+    fewer chained rings); identity on unmapped axes."""
+    n = _names(axis)
+    if not n:
+        return v
+    p, axn = flat_ring_axis(axis)
     if p == 1:
         return v
-    idx = jax.lax.axis_index(name)
+    dim = dim % v.ndim
+    idx = flat_ring_index(axis)
     perm = ring_perm(p)
     chunk = v.shape[dim]
     out_shape = list(v.shape)
@@ -209,34 +258,28 @@ def _ring_ag_one(v, name: str, dim: int):
         out = jax.lax.dynamic_update_slice_in_dim(out, cur, j * chunk,
                                                   axis=dim)
         if s < p - 1:
-            cur = jax.lax.ppermute(cur, name, perm)
+            cur = jax.lax.ppermute(cur, axn, perm)
     return out
 
 
-def ring_all_gather(v, axis: AxisName, *, dim: int):
-    """``all_gather(tiled=True)`` decomposed into p-1 ``ppermute`` ring
-    steps (so XLA can overlap each hop with unrelated compute). Bitwise
-    the same result ordering as :func:`all_gather`; identity on unmapped
-    axes."""
+def ring_reduce_scatter(v, axis: AxisName, *, dim: int):
+    """``psum_scatter(tiled=True)`` as a p-1 step ``ppermute`` ring:
+    each rank's partial for block j is added just-in-time as the running
+    sum passes through. Identity on unmapped axes; tuple axes ring once
+    over the flattened group (same block layout as the per-name loop in
+    :func:`psum_scatter`)."""
     n = _names(axis)
     if not n:
         return v
-    dim = dim % v.ndim
-    out = v
-    for name in n:
-        out = _ring_ag_one(out, name, dim)
-    return out
-
-
-def _ring_rs_one(v, name: str, dim: int):
-    p = _axis_size(name)
+    p, axn = flat_ring_axis(axis)
     if p == 1:
         return v
+    dim = dim % v.ndim
     if v.shape[dim] % p:
         raise ValueError(  # psum_scatter(tiled=True) rejects this too
             f"ring_reduce_scatter: dim {dim} of size {v.shape[dim]} not "
-            f"divisible by axis {name!r} size {p}")
-    idx = jax.lax.axis_index(name)
+            f"divisible by axis {n!r} size {p}")
+    idx = flat_ring_index(axis)
     perm = ring_perm(p)
     chunk = v.shape[dim] // p
     recv = None
@@ -245,23 +288,37 @@ def _ring_rs_one(v, name: str, dim: int):
         j = (idx - s) % p
         g = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=dim)
         part = g if recv is None else recv + g
-        recv = jax.lax.ppermute(part, name, perm)
+        recv = jax.lax.ppermute(part, axn, perm)
     g = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=dim)
     return g if recv is None else recv + g
 
 
-def ring_reduce_scatter(v, axis: AxisName, *, dim: int):
-    """``psum_scatter(tiled=True)`` as a p-1 step ``ppermute`` ring:
-    each rank's partial for block j is added just-in-time as the running
-    sum passes through. Identity on unmapped axes."""
+def ring_all_reduce(v, axis: AxisName, *, dim: int = -1):
+    """:func:`psum` decomposed into a reduce-scatter ring phase followed
+    by an all-gather ring phase over ``dim`` (the bandwidth-optimal
+    all-reduce, spelled as 2(p-1) ``ppermute`` hops so XLA's
+    latency-hiding scheduler can interleave them with unrelated compute).
+
+    Fast path p == 2: the send-right "ring" *is* the bidirectional
+    exchange — each shard sends its full buffer one hop and adds what it
+    receives (bitwise equal to psum: two-term fp addition commutes).
+    Identity on unmapped/size-1 axes; falls back to the blocking psum
+    when ``dim`` does not split evenly over the ring (the scatter phase
+    needs equal blocks). Results match psum within fp32-accumulation
+    reassociation; exactly when the addends sum exactly."""
     n = _names(axis)
     if not n:
         return v
+    p, axn = flat_ring_axis(axis)
+    if p == 1:
+        return v
+    if p == 2:
+        return v + jax.lax.ppermute(v, axn, ring_perm(2))
     dim = dim % v.ndim
-    out = v
-    for name in reversed(n):
-        out = _ring_rs_one(out, name, dim)
-    return out
+    if v.shape[dim] % p:
+        return jax.lax.psum(v, n)
+    return ring_all_gather(ring_reduce_scatter(v, axis, dim=dim), axis,
+                           dim=dim)
 
 
 def axis_index(axis: AxisName):

@@ -9,7 +9,11 @@ collective operations with computation". Two mechanisms implement it here:
     overlap *inside* each layer: the z-axis weight all-gather / gradient
     reduce-scatter is decomposed into ``lax.ppermute`` ring steps whose
     per-chunk GEMMs interleave with the permutes, so the weight traffic
-    hides under the layer's own compute.
+    hides under the layer's own compute. The same treatment applies to
+    the x/y *activation* all-reduces of every tensor-parallel matmul
+    (``all_reduce`` below): each all-reduce becomes a reduce-scatter ring
+    whose hops consume the producing GEMM's output chunk by chunk,
+    followed by an all-gather ring (AxoNN-style, arXiv:2110.13005).
 
 An :class:`OverlapConfig` instance rides on :class:`repro.core.mesh.
 MeshAxes` (``axes.with_overlap(cfg)``) so every ``tp_*`` primitive sees it
@@ -37,12 +41,24 @@ class OverlapConfig:
     ``tp_batched_matmul`` / ``tied_lm_logits``. Off (default) keeps the
     blocking all-gather / reduce-scatter schedule.
 
+    all_reduce: ring-decompose the x/y *activation* all-reduces of the
+    same three primitives (fwd partial-output reduce, bwd dX reduce, tied
+    dh reduce) into reduce-scatter + all-gather ``ppermute`` phases; where
+    the reduced tensor's producing GEMM is materialized in the same
+    schedule, its output is produced per chunk, just in time for each
+    reduce-scatter hop (``collective_matmul.ar_matmul*``). The scalar
+    psums of the feature-sharded norms and the vocab-parallel softmax
+    stay blocking (latency-bound, nothing to pipeline).
+
     z_chunks: how many independent ring pipelines the z-axis collective of
     one matmul is split into. 1 = one ring whose steps already interleave
     one GEMM per hop; c > 1 splits each per-device weight block into ``c``
     sub-blocks with their own (smaller) rings, giving the scheduler
     finer-grained permute/GEMM pairs to overlap. Must divide the per-device
     block's gathered dimension.
+
+    ar_chunks: same knob for the activation all-reduce rings (sub-rings
+    per scattered block; the largest divisor <= ar_chunks is used).
 
     cache_weight_gather: keep the z-gathered weight from the forward as a
     residual instead of re-gathering it in the backward (EXPERIMENTS.md
@@ -52,19 +68,25 @@ class OverlapConfig:
     matmul: bool = False
     batched_matmul: bool = False
     tied_logits: bool = False
+    all_reduce: bool = False
     z_chunks: int = 1
+    ar_chunks: int = 1
     cache_weight_gather: bool = False
 
     def __post_init__(self):
         if self.z_chunks < 1:
             raise ValueError(f"z_chunks must be >= 1, got {self.z_chunks}")
+        if self.ar_chunks < 1:
+            raise ValueError(f"ar_chunks must be >= 1, got {self.ar_chunks}")
 
     @property
     def any_enabled(self) -> bool:
-        return self.matmul or self.batched_matmul or self.tied_logits
+        return (self.matmul or self.batched_matmul or self.tied_logits
+                or self.all_reduce)
 
     @classmethod
-    def all_on(cls, *, z_chunks: int = 1,
+    def all_on(cls, *, z_chunks: int = 1, ar_chunks: int = 1,
                cache_weight_gather: bool = False) -> "OverlapConfig":
         return cls(matmul=True, batched_matmul=True, tied_logits=True,
-                   z_chunks=z_chunks, cache_weight_gather=cache_weight_gather)
+                   all_reduce=True, z_chunks=z_chunks, ar_chunks=ar_chunks,
+                   cache_weight_gather=cache_weight_gather)

@@ -69,17 +69,37 @@ def _axes_for(axes: M.MeshAxes, transposed: bool):
 
 
 def _zring(axes: M.MeshAxes, enabled: bool):
-    """Mesh axis name for the fused ring path, or None for blocking.
+    """Mesh axis name(s) for the fused z ring path, or None for blocking.
 
-    The ring drivers need a single named axis of size > 1; tuple z axes
-    and unmapped/size-1 z fall back to the blocking schedule (which is
-    itself an identity over z in the size-1 case)."""
+    Single- and multi-name (tuple) z axes both ring (the drivers flatten
+    tuples into one combined ring); unmapped/size-1 z falls back to the
+    blocking schedule (which is itself an identity over z there)."""
     if not enabled:
         return None
     n = M._names(axes.z)
-    if len(n) != 1 or axes.gz <= 1:
+    if not n or axes.gz <= 1:
         return None
-    return n[0]
+    return n[0] if len(n) == 1 else n
+
+
+def _arring(axes: M.MeshAxes, ax):
+    """Ring axis name(s) for an activation all-reduce over ``ax`` under
+    ``overlap.all_reduce``, or None for the blocking psum."""
+    if not axes.overlap.all_reduce:
+        return None
+    n = M._names(ax)
+    if not n or axes.size(ax) <= 1:
+        return None
+    return n[0] if len(n) == 1 else n
+
+
+def _ar(v, axes: M.MeshAxes, ax):
+    """All-reduce ``v`` over ``ax``: ring-decomposed over the last dim
+    when ``overlap.all_reduce`` is on (with ring_all_reduce's own
+    fallbacks for p == 1 / non-dividing shapes), else blocking psum."""
+    if _arring(axes, ax) is not None:
+        return M.ring_all_reduce(v, ax, dim=-1)
+    return M.psum(v, ax)
 
 
 def wspec(axes: M.MeshAxes, in_shard: Optional[str], out_shard: Optional[str]
@@ -142,38 +162,50 @@ def tp_matmul(x, w, axes: M.MeshAxes, in_shard: Optional[str] = "x",
     With ``axes.overlap.matmul`` set, the z-axis weight collectives run as
     ring-decomposed collective matmuls (core/collective_matmul.py): the
     forward AG_z becomes per-chunk GEMMs interleaved with ``ppermute``
-    hops, the backward dW reduce-scatter a fused RS-matmul. The collective
-    *schedule* (what is reduced where) is unchanged — only its
-    decomposition, so results match within fp32-accum reassociation.
+    hops, the backward dW reduce-scatter a fused RS-matmul. With
+    ``axes.overlap.all_reduce`` the x/y *activation* all-reduces (fwd
+    line 6, bwd line 13) additionally decompose into reduce-scatter +
+    all-gather rings — fused with the producing GEMM whenever the full
+    weight is materialized. The collective *schedule* (what is reduced
+    where) is unchanged — only its decomposition, so results match
+    within fp32-accum reassociation.
     """
     in_ax = _logical(axes, in_shard)
-    ring = _zring(axes, axes.overlap.matmul)
+    ov = axes.overlap
+    ring = _zring(axes, ov.matmul)
+    ar = _arring(axes, in_ax)
     if ring is None:
         wf = M.all_gather(w, axes.z, dim=1)        # AG_z (4D)
+        if ar is not None:                          # fused GEMM + AR ring
+            return CMM.ar_matmul(x, wf, ar, chunks=ov.ar_chunks)
         y = _mm(x, wf)                              # local GEMM (line 6)
     else:
-        y = CMM.ag_matmul(x, w, ring, chunks=axes.overlap.z_chunks)
-    return M.psum(y, in_ax)                         # All-Reduce_c (line 6)
+        y = CMM.ag_matmul(x, w, ring, chunks=ov.z_chunks)
+    return _ar(y, axes, in_ax)                      # All-Reduce_c (line 6)
 
 
 def _tpmm_fwd(x, w, axes, in_shard, out_shard):
     in_ax = _logical(axes, in_shard)
     ov = axes.overlap
     ring = _zring(axes, ov.matmul)
+    ar = _arring(axes, in_ax)
     # paper line 7 caches the *local* partitions; by default we re-gather
     # over z in the backward pass to keep the z-sharded weight footprint
     # (overlap.cache_weight_gather keeps wf and saves one AG_z).
     if ov.cache_weight_gather:
         wf = (M.ring_all_gather(w, axes.z, dim=1) if ring is not None
               else M.all_gather(w, axes.z, dim=1))
-        y = M.psum(_mm(x, wf), in_ax)
+        y = (CMM.ar_matmul(x, wf, ar, chunks=ov.ar_chunks)
+             if ar is not None else M.psum(_mm(x, wf), in_ax))
         return y, (x, w, wf)
     if ring is None:
         wf = M.all_gather(w, axes.z, dim=1)
+        if ar is not None:
+            return CMM.ar_matmul(x, wf, ar, chunks=ov.ar_chunks), (x, w, None)
         y = _mm(x, wf)
     else:
         y = CMM.ag_matmul(x, w, ring, chunks=ov.z_chunks)
-    return M.psum(y, in_ax), (x, w, None)
+    return _ar(y, axes, in_ax), (x, w, None)
 
 
 def _tpmm_bwd(axes, in_shard, out_shard, res, dy):
@@ -181,18 +213,24 @@ def _tpmm_bwd(axes, in_shard, out_shard, res, dy):
     ov = axes.overlap
     ring = _zring(axes, ov.matmul)
     out_ax = _logical(axes, out_shard)
+    ar = _arring(axes, out_ax)
     # dX = All-Reduce_r(dY @ W^T)  (line 13); the z re-gather of W fuses
     # into the GEMM as a ring over the contraction segments
     if wf is None and ring is not None:
         dx = CMM.accum_matmul_dx(dy, w, ring,
                                  chunks=ov.z_chunks).astype(x.dtype)
+        dx = _ar(dx, axes, out_ax)
+    elif ar is not None:
+        if wf is None:
+            wf = M.all_gather(w, axes.z, dim=1)    # re-gather (AG_z)
+        dx = CMM.ar_matmul_t(dy, wf, ar, chunks=ov.ar_chunks)
     else:
         if wf is None:
             wf = M.all_gather(w, axes.z, dim=1)    # re-gather (AG_z)
         dx = jax.lax.dot_general(
             dy, wf, (((dy.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32).astype(x.dtype)
-    dx = M.psum(dx, out_ax)
+        dx = M.psum(dx, out_ax)
     # dW = X^T @ dY, reduce-scattered over z (line 14 + 4D)
     k = x.shape[-1]
     n = dy.shape[-1]
@@ -237,14 +275,20 @@ def tp_batched_matmul(x, w, axes: M.MeshAxes, in_shard: Optional[str],
     ``in_shard``/``out_shard`` here are 'x' or None.
 
     ``axes.overlap.batched_matmul`` rings the z collectives exactly as in
-    tp_matmul."""
-    ring = _zring(axes, axes.overlap.batched_matmul)
+    tp_matmul; ``axes.overlap.all_reduce`` rings the activation
+    all-reduces."""
+    ov = axes.overlap
+    in_ax = _logical(axes, in_shard)
+    ring = _zring(axes, ov.batched_matmul)
+    ar = _arring(axes, in_ax)
     if ring is None:
         wf = M.all_gather(w, axes.z, dim=2)
+        if ar is not None:
+            return CMM.ar_matmul_batched(x, wf, ar, chunks=ov.ar_chunks)
         y = _bmm(x, wf)
     else:
-        y = CMM.ag_matmul_batched(x, w, ring, chunks=axes.overlap.z_chunks)
-    return M.psum(y, _logical(axes, in_shard))
+        y = CMM.ag_matmul_batched(x, w, ring, chunks=ov.z_chunks)
+    return _ar(y, axes, in_ax)
 
 
 def _tpbmm_fwd(x, w, axes, in_shard, out_shard):
@@ -256,14 +300,20 @@ def _tpbmm_bwd(axes, in_shard, out_shard, res, dy):
     x, w = res
     ov = axes.overlap
     ring = _zring(axes, ov.batched_matmul)
+    out_ax = _logical(axes, out_shard)
+    ar = _arring(axes, out_ax)
     if ring is None:
         wf = M.all_gather(w, axes.z, dim=2)
-        dx = jax.lax.dot_general(
-            dy, wf, (((2,), (2,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32)
+        if ar is not None:
+            dx = CMM.ar_matmul_batched_t(dy, wf, ar, chunks=ov.ar_chunks)
+        else:
+            dx = jax.lax.dot_general(
+                dy, wf, (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+            dx = M.psum(dx.astype(x.dtype), out_ax)
     else:
         dx = CMM.accum_matmul_dx_batched(dy, w, ring, chunks=ov.z_chunks)
-    dx = M.psum(dx.astype(x.dtype), _logical(axes, out_shard))
+        dx = _ar(dx.astype(x.dtype), axes, out_ax)
     if ring is None:
         dw = jax.lax.dot_general(
             x, dy, (((1,), (1,)), ((0,), (0,))),
@@ -430,9 +480,14 @@ def tied_lm_logits(h, table, axes: M.MeshAxes):
 
 
 def _tied_fwd(h, table, axes):
-    ring = _zring(axes, axes.overlap.tied_logits)
+    ov = axes.overlap
+    ring = _zring(axes, ov.tied_logits)
+    ar = _arring(axes, axes.x)
     if ring is None:
         tf = M.all_gather(table, axes.z, dim=1)      # (V/y, d/x)
+        if ar is not None:
+            # reduced (V) dim indexes the table's rows: fused AR-matmul
+            return CMM.ar_matmul_t(h, tf, ar, chunks=ov.ar_chunks), (h, table)
         logits = jax.lax.dot_general(
             h, tf, (((h.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -440,8 +495,8 @@ def _tied_fwd(h, table, axes):
         # the gathered (d) dim is the contraction dim here: ring-
         # accumulate over the z segments of h against the table blocks
         logits = CMM.accum_matmul_tied(h, table, ring,
-                                       chunks=axes.overlap.z_chunks)
-    logits = M.psum(logits.astype(h.dtype), axes.x)
+                                       chunks=ov.z_chunks)
+    logits = _ar(logits.astype(h.dtype), axes, axes.x)
     return logits, (h, table)
 
 
@@ -449,15 +504,20 @@ def _tied_bwd(axes, res, dlogits):
     h, table = res
     ov = axes.overlap
     ring = _zring(axes, ov.tied_logits)
+    ar = _arring(axes, axes.y)
     if ring is None:
         tf = M.all_gather(table, axes.z, dim=1)
-        dh = jax.lax.dot_general(
-            dlogits, tf, (((dlogits.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if ar is not None:
+            dh = CMM.ar_matmul(dlogits, tf, ar, chunks=ov.ar_chunks)
+        else:
+            dh = jax.lax.dot_general(
+                dlogits, tf, (((dlogits.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dh = M.psum(dh.astype(h.dtype), axes.y)
     else:
         dh = CMM.ag_matmul_tied_dh(dlogits, table, ring,
                                    chunks=ov.z_chunks)
-    dh = M.psum(dh.astype(h.dtype), axes.y)
+        dh = _ar(dh.astype(h.dtype), axes, axes.y)
     v = dlogits.shape[-1]
     d = h.shape[-1]
     if ring is None:

@@ -167,12 +167,13 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               multi_pod: bool = False, xent_chunks: int = 0,
               overdecompose: int = 1, factors=None, probe: bool = True,
               remat_policy: str = "full", cache_gather: bool = False,
-              overlap: bool = False, z_chunks: int = 1):
-    # z_chunks only means something on the ring path; normalize so the
+              overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1):
+    # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
     z_chunks = z_chunks if overlap else 1
-    ov = (OverlapConfig.all_on(z_chunks=z_chunks,
+    ar_chunks = ar_chunks if overlap else 1
+    ov = (OverlapConfig.all_on(z_chunks=z_chunks, ar_chunks=ar_chunks,
                                cache_weight_gather=cache_gather)
           if overlap else OverlapConfig(cache_weight_gather=cache_gather))
     cfg = get_config(arch)
@@ -255,7 +256,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
                     "g_y": factors[2], "g_z": factors[3]},
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
-        "overlap": overlap, "z_chunks": z_chunks,
+        "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
         "compile_s": round(compile_s, 1), "probe_s": round(probe_s, 1),
         "memory": mem,
         "roofline": roof,
@@ -349,9 +350,13 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--overdecompose", type=int, default=1)
     ap.add_argument("--overlap", action="store_true",
-                    help="ring-decomposed collective matmuls (overlapped "
-                         "z-axis schedule)")
+                    help="ring-decomposed collective matmuls: overlapped "
+                         "z-axis weight collectives AND x/y activation "
+                         "all-reduce rings")
     ap.add_argument("--z-chunks", type=int, default=1)
+    ap.add_argument("--ar-chunks", type=int, default=1,
+                    help="sub-rings per scattered block of the x/y "
+                         "activation all-reduces (with --overlap)")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip depth-probe lowerings (multi-pod pass: the "
                          "compile proof only, roofline terms from the "
@@ -365,6 +370,7 @@ def main():
               else [args.mesh])
     pods = [False, True] if args.both_pods else [args.multi_pod]
     z_chunks = args.z_chunks if args.overlap else 1  # inert without ring
+    ar_chunks = args.ar_chunks if args.overlap else 1
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -376,7 +382,8 @@ def main():
                     done.add((r["arch"], r["shape"], r["mesh"],
                               r["multi_pod"], r.get("overdecompose", 1),
                               r.get("overlap", False),
-                              r.get("z_chunks", 1)))
+                              r.get("z_chunks", 1),
+                              r.get("ar_chunks", 1)))
                 except Exception:
                     pass
 
@@ -389,7 +396,7 @@ def main():
             for mk in meshes:
                 for mp in pods:
                     key = (arch, shape, mk, mp, args.overdecompose,
-                           args.overlap, z_chunks)
+                           args.overlap, z_chunks, ar_chunks)
                     if key in done:
                         print(f"cached {key}")
                         continue
@@ -400,6 +407,7 @@ def main():
                             arch, shape, mk, multi_pod=mp,
                             overdecompose=args.overdecompose,
                             overlap=args.overlap, z_chunks=z_chunks,
+                            ar_chunks=ar_chunks,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -414,6 +422,7 @@ def main():
                                "overdecompose": args.overdecompose,
                                "overlap": args.overlap,
                                "z_chunks": z_chunks,
+                               "ar_chunks": ar_chunks,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

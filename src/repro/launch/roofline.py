@@ -31,8 +31,10 @@ HBM_BW = 819e9
 ICI_BW = CM.TPU_V5E.link_bw
 
 # what the compiled-HLO step-time estimate treats as overlappable: the
-# ring-decomposed z collectives lower to collective-permute chains whose
-# hops interleave with the per-chunk GEMMs; everything else blocks
+# ring-decomposed collectives — z weight AG/RS rings AND the x/y
+# activation all-reduce (RS+AG) rings — all lower to collective-permute
+# chains whose hops interleave with the per-chunk GEMMs; everything else
+# blocks
 OVERLAPPABLE_COLLECTIVES = ("collective-permute",)
 
 _DTYPE_BYTES = {
@@ -121,9 +123,10 @@ def step_time_estimate(flops: float, bytes_by_kind: Dict[str, float], *,
 
     The analytic twin is ``comm_model.predict_step_time`` (closed-form
     shapes); this one prices the *measured* per-device collective bytes:
-    collective-permute traffic (the ring-decomposed z collectives) hides
-    under up to ``overlap_efficiency`` of the compute time, blocking
-    collectives are fully exposed."""
+    collective-permute traffic (the ring-decomposed z weight collectives
+    and x/y activation all-reduces) hides under up to
+    ``overlap_efficiency`` of the compute time, blocking collectives are
+    fully exposed."""
     hw = hw or CM.TPU_V5E
     compute_t = flops / hw.flops
     hid_b = sum(v for k, v in bytes_by_kind.items()

@@ -1,8 +1,13 @@
-"""Test fixtures: an 8-host-device mesh for sharding tests.
+"""Test fixtures: a small host-device mesh for sharding tests.
 
-(8 devices for *smoke* sharding — the 512-device production mesh is only
-ever created by launch/dryrun.py, never here.)
+The CI matrix runs the suite at 4 AND 8 host devices (set via XLA_FLAGS;
+8 is the default for local runs — the 512-device production mesh is only
+ever created by launch/dryrun.py, never here). ``N_DEVICES`` below is the
+single knob tests key off: the shared fixtures shrink their meshes to
+fit, parametrized shape lists filter through ``fitting_shapes``, and
+tests with a single hard-coded mesh branch on ``N_DEVICES`` inline.
 """
+import math
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -11,11 +16,19 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+N_DEVICES = jax.device_count()
+
+
+def fitting_shapes(shapes):
+    """Filter 4D mesh shapes to those the host's device count can hold."""
+    return [s for s in shapes if math.prod(s) <= N_DEVICES]
+
 
 @pytest.fixture(scope="session")
 def mesh4():
     from repro.launch import mesh as LM
-    return LM.make_smoke_mesh((2, 2, 2, 1))
+    return LM.make_smoke_mesh((2, 2, 2, 1) if N_DEVICES >= 8
+                              else (1, 2, 2, 1))
 
 
 @pytest.fixture(scope="session")
@@ -27,7 +40,8 @@ def axes4(mesh4):
 @pytest.fixture(scope="session")
 def meshz():
     from repro.launch import mesh as LM
-    return LM.make_smoke_mesh((1, 2, 2, 2))
+    return LM.make_smoke_mesh((1, 2, 2, 2) if N_DEVICES >= 8
+                              else (1, 1, 2, 2))
 
 
 @pytest.fixture(scope="session")

@@ -1,11 +1,13 @@
 """Ring-decomposed collective matmuls (core/collective_matmul.py) and the
 α-β overlap-aware time model (core/comm_model.py).
 
-The overlapped z-axis schedule must be a pure *decomposition* of the
-blocking one: same forward outputs and same dX/dW gradients (within
-fp32-accum reassociation) across (x, y, z) decompositions of the 8-device
-CPU mesh, with collective-permute chains in the HLO where the monolithic
-weight all-gather / reduce-scatter used to be.
+The overlapped schedules must be pure *decompositions* of the blocking
+ones: same forward outputs and same dX/dW gradients (within fp32-accum
+reassociation) across (x, y, z) decompositions of the CPU smoke mesh,
+with collective-permute chains in the HLO where the monolithic weight
+all-gather / reduce-scatter — and, with ``all_reduce`` on, the x/y
+activation all-reduces — used to be. Shapes scale down automatically on
+4-device CI hosts (conftest.N_DEVICES).
 """
 import jax
 import jax.numpy as jnp
@@ -13,6 +15,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from conftest import N_DEVICES, fitting_shapes
+from repro.core import collective_matmul as CMM
 from repro.core import comm_model as CM
 from repro.core import mesh as M
 from repro.core import parallel as PP
@@ -23,17 +27,35 @@ from repro.launch import roofline as RL
 
 K, N, B, S = 16, 24, 8, 8
 
-SHAPES_4D = [(1, 2, 2, 2), (2, 2, 1, 2), (2, 1, 2, 2), (1, 1, 2, 4),
-             (2, 2, 2, 1)]
+SHAPES_4D = fitting_shapes([(1, 2, 2, 2), (2, 2, 1, 2), (2, 1, 2, 2),
+                            (1, 1, 2, 4), (2, 2, 2, 1),
+                            (1, 2, 2, 1), (1, 1, 2, 2)])
+# the deepest-z shape the host holds (z rings of size > 2)
+SHAPE_Z = (1, 2, 2, 2) if N_DEVICES >= 8 else (1, 1, 2, 2)
 OVERLAPS = [OverlapConfig.all_on(),
             OverlapConfig.all_on(z_chunks=2),
+            OverlapConfig.all_on(ar_chunks=2),
+            OverlapConfig(all_reduce=True),
             OverlapConfig.all_on(cache_weight_gather=True)]
 
 
 def _ids(v):
     if isinstance(v, OverlapConfig):
-        return f"c{v.z_chunks}" + ("_cache" if v.cache_weight_gather else "")
+        tags = []
+        if v.matmul:
+            tags.append(f"z{v.z_chunks}")
+        if v.all_reduce:
+            tags.append(f"ar{v.ar_chunks}")
+        if v.cache_weight_gather:
+            tags.append("cache")
+        return "_".join(tags)
     return str(v)
+
+
+def _exact_random(key, shape):
+    """Random fp32 values whose sums/products are exact (small ints), so
+    every reduction order gives bitwise-identical results."""
+    return jax.random.randint(key, shape, -4, 5).astype(jnp.float32)
 
 
 # --------------------------------------------------------------------- #
@@ -65,14 +87,17 @@ def test_ring_primitives_match_blocking(shape):
 
 
 def test_ring_identity_on_unmapped_axis():
-    mesh = LM.make_smoke_mesh((2, 2, 2, 1))
+    shape = (2, 2, 2, 1) if N_DEVICES >= 8 else (1, 2, 2, 1)
+    mesh = LM.make_smoke_mesh(shape)
     axes = M.bind_axes(mesh, data=("data",), x="x", y="y")  # z unmapped
 
     def body(v):
         a = M.ring_all_gather(v, axes.z, dim=1)
         b = M.ring_reduce_scatter(v, axes.z, dim=1)
         c = M.ppermute_ring(v, axes.z)
-        return jnp.max(jnp.abs(a - v) + jnp.abs(b - v) + jnp.abs(c - v))
+        d = M.ring_all_reduce(v, axes.z)
+        return jnp.max(jnp.abs(a - v) + jnp.abs(b - v) + jnp.abs(c - v)
+                       + jnp.abs(d - v))
 
     f = shard_map(body, mesh=mesh, in_specs=P(None, None),
                   out_specs=P(), check_vma=False)
@@ -80,7 +105,8 @@ def test_ring_identity_on_unmapped_axis():
 
 
 def test_ppermute_ring_shifts():
-    mesh = LM.make_smoke_mesh((1, 1, 2, 4))
+    shape = (1, 1, 2, 4) if N_DEVICES >= 8 else (1, 1, 1, 4)
+    mesh = LM.make_smoke_mesh(shape)
     axes = LM.bind_4d(mesh)
 
     def body(v):
@@ -94,13 +120,107 @@ def test_ppermute_ring_shifts():
 
 
 # --------------------------------------------------------------------- #
+# ring_all_reduce == psum (satellite: identity / tuple axes / bitwise)
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("logical", ["x", "y", "z", "data"])
+@pytest.mark.parametrize("shape", SHAPES_4D, ids=str)
+def test_ring_all_reduce_matches_psum(shape, logical):
+    """ring_all_reduce == psum over every mesh axis: bitwise on
+    exactly-summable values (any ring size — the decomposition must move
+    the right blocks to the right places), and within reassociation
+    tolerance on generic floats."""
+    mesh = LM.make_smoke_mesh(shape)
+    axes = LM.bind_4d(mesh)
+    ax = axes.axis(logical)
+
+    def body(v):
+        d = jnp.max(jnp.abs(M.ring_all_reduce(v, ax, dim=-1)
+                            - M.psum(v, ax)))
+        return M.pmax(M.pmax(M.pmax(M.pmax(
+            d, axes.data), axes.x), axes.y), axes.z)
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False))
+    exact = _exact_random(jax.random.PRNGKey(0), (4, 8))
+    assert float(f(exact)) == 0.0, "schedule must be bitwise on exact sums"
+    fuzzy = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    assert float(f(fuzzy)) < 1e-5
+
+
+def test_ring_all_reduce_tuple_axis():
+    """A tuple (multi-name) ring axis must flatten into ONE ring, not
+    fall back to blocking: correct sum AND no all-reduce in the HLO."""
+    shape = (1, 2, 2, 2) if N_DEVICES >= 8 else (1, 2, 2, 1)
+    mesh = LM.make_smoke_mesh(shape)
+    names = ("x", "y", "z") if N_DEVICES >= 8 else ("x", "y")
+
+    def body(v):
+        return M.ring_all_reduce(v, names, dim=-1)
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False))
+    v = _exact_random(jax.random.PRNGKey(0), (2, 8))
+    p = int(np.prod(shape[1:]))
+    np.testing.assert_array_equal(np.asarray(f(v)), np.asarray(v) * p)
+    stats = RL.parse_collectives(f.lower(v).compile().as_text())
+    assert stats.counts.get("all-reduce", 0) == 0
+    assert stats.counts.get("collective-permute", 0) >= 1
+
+
+def test_ring_all_reduce_fallback_nondivisible():
+    """Rings (p > 2) that don't split the dim evenly must silently fall
+    back to the blocking psum — correctness over decomposition."""
+    shape = (1, 1, 2, 4) if N_DEVICES >= 8 else (1, 1, 1, 4)
+    mesh = LM.make_smoke_mesh(shape)
+    axes = LM.bind_4d(mesh)
+
+    def body(v):
+        return M.ring_all_reduce(v, axes.z, dim=-1)  # 6 % 4 != 0
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False))
+    v = _exact_random(jax.random.PRNGKey(0), (2, 6))
+    np.testing.assert_array_equal(np.asarray(f(v)), np.asarray(v) * 4)
+
+
+@pytest.mark.parametrize("chunks", [1, 2, 3])
+def test_ar_matmul_bitwise_vs_psum(chunks):
+    """Satellite acceptance: the fused AR-matmul forward is bitwise
+    identical to the blocking GEMM + psum at matching chunk counts (on
+    exactly-summable values, where reduction order cannot hide schedule
+    bugs)."""
+    shape = (1, 2, 2, 2) if N_DEVICES >= 8 else (1, 2, 2, 1)
+    mesh = LM.make_smoke_mesh(shape)
+    x = _exact_random(jax.random.PRNGKey(0), (B, K))
+    w = _exact_random(jax.random.PRNGKey(1), (K, N))
+
+    def body(x, w):
+        blocking = jax.lax.psum(
+            jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32
+                                ).astype(x.dtype), ("x", "y"))
+        ring2 = CMM.ar_matmul(x, w, "x", chunks=chunks)       # p = 2 path
+        ring2 = jax.lax.psum(ring2, "y")
+        ring4 = CMM.ar_matmul(x, w, ("x", "y"), chunks=chunks)  # tuple ring
+        d2 = jnp.max(jnp.abs(blocking - ring2))
+        d4 = jnp.max(jnp.abs(blocking - ring4))
+        return jax.lax.pmax(jax.lax.pmax(jnp.stack([d2, d4]), "x"), "y")
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=P(), check_vma=False))
+    d2, d4 = np.asarray(f(x, w))
+    assert d2 == 0.0 and d4 == 0.0, (d2, d4)
+
+
+# --------------------------------------------------------------------- #
 # overlapped tp primitives == blocking (values AND gradients)
 # --------------------------------------------------------------------- #
 
 def _run_matmul(mesh, base, axes, x, w, in_shard, out_shard):
     wspec = PP.wspec(base, in_shard, out_shard)
-    in_ax = base.axis(in_shard)
-    out_ax = base.axis(out_shard)
+    in_ax = base.axis(in_shard) if in_shard else None
+    out_ax = base.axis(out_shard) if out_shard else None
     xspec = base.pspec(base.batch_axes(), None, in_ax)
 
     def loss(x, w):
@@ -139,9 +259,43 @@ def test_tp_matmul_overlap_matches_blocking(shape, ov, shards):
                                rtol=2e-5, atol=1e-5)
 
 
+def test_tp_matmul_tuple_z_ring():
+    """Tuple (multi-name) z axes must take the fused ring path — parity
+    with blocking AND collective-permutes (not a blocking fallback) in
+    the HLO."""
+    shape = (1, 2, 2, 2) if N_DEVICES >= 8 else (1, 1, 2, 2)
+    mesh = LM.make_smoke_mesh(shape)
+    # depth axis spans two mesh names: gz = 4
+    base = M.bind_axes(mesh, data=("data",), x="x", z=("y", "z"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
+    vb, gxb, gwb = _run_matmul(mesh, base, base, x, w, "x", None)
+    ov = OverlapConfig.all_on()
+    axes = base.with_overlap(ov)
+    vo, gxo, gwo = _run_matmul(mesh, base, axes, x, w, "x", None)
+    np.testing.assert_allclose(np.asarray(vb), np.asarray(vo), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(gxb), np.asarray(gxo),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gwb), np.asarray(gwo),
+                               rtol=2e-5, atol=1e-5)
+
+    wspec = PP.wspec(base, "x", None)
+    xspec = base.pspec(base.batch_axes(), None, base.x)
+
+    def fwd(x, w):
+        return PP.tp_matmul(x, w, axes, "x", None)
+
+    f = shard_map(fwd, mesh=mesh, in_specs=(xspec, wspec),
+                  out_specs=base.pspec(base.batch_axes(), None, None),
+                  check_vma=False)
+    stats = RL.parse_collectives(jax.jit(f).lower(x, w).compile().as_text())
+    assert stats.counts.get("all-gather", 0) == 0, stats.counts
+    assert stats.counts.get("collective-permute", 0) >= 1, stats.counts
+
+
 @pytest.mark.parametrize("ov", OVERLAPS, ids=_ids)
 def test_batched_matmul_overlap_matches_blocking(ov):
-    mesh = LM.make_smoke_mesh((1, 2, 2, 2))
+    mesh = LM.make_smoke_mesh(SHAPE_Z)
     base = LM.bind_4d(mesh)
     E, C = 4, 8
     x = jax.random.normal(jax.random.PRNGKey(0), (E, C, K))
@@ -169,7 +323,10 @@ def test_batched_matmul_overlap_matches_blocking(ov):
                                    rtol=2e-5, atol=1e-5, err_msg=name)
 
 
-@pytest.mark.parametrize("shape", [(1, 2, 2, 2), (1, 1, 2, 4)], ids=str)
+@pytest.mark.parametrize("shape",
+                         fitting_shapes([(1, 2, 2, 2), (1, 1, 2, 4),
+                                         (1, 2, 2, 1), (1, 1, 2, 2)]),
+                         ids=str)
 @pytest.mark.parametrize("ov", OVERLAPS, ids=_ids)
 def test_tied_logits_overlap_matches_blocking(shape, ov):
     mesh = LM.make_smoke_mesh(shape)
@@ -200,35 +357,39 @@ def test_tied_logits_overlap_matches_blocking(shape, ov):
                                rtol=2e-5, atol=1e-5)
 
 
-def test_overlap_hlo_uses_collective_permute():
-    """Acceptance: on (x=2, y=2, z=2) the overlapped mode's HLO replaces
-    the monolithic z all-gather / reduce-scatter of the matmul path with
-    collective-permute chains."""
-    mesh = LM.make_smoke_mesh((1, 2, 2, 2))
+def _tp_collective_counts(ov):
+    """Collective op counts of one tp_matmul fwd+bwd toy program."""
+    mesh = LM.make_smoke_mesh(SHAPE_Z)
     base = LM.bind_4d(mesh)
+    axes = base.with_overlap(ov) if ov is not None else base
     x = jax.random.normal(jax.random.PRNGKey(0), (B, S, K))
     w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
     wspec = PP.yz_spec(base, False)
     xspec = base.pspec(base.batch_axes(), None, base.x)
 
-    def build(axes):
-        def loss(x, w):
-            y = PP.tp_matmul(x, w, axes, "x", "y")
-            return PP.ar_bwd_identity(
-                jnp.sum(y.astype(jnp.float32) ** 2),
-                M._names(axes.batch_axes()) + M._names(axes.y))
+    def loss(x, w):
+        y = PP.tp_matmul(x, w, axes, "x", "y")
+        return PP.ar_bwd_identity(
+            jnp.sum(y.astype(jnp.float32) ** 2),
+            M._names(axes.batch_axes()) + M._names(axes.y))
 
-        def step(x, w):
-            v, g = jax.value_and_grad(loss, argnums=(0, 1))(x, w)
-            return v, g[0], M.psum(g[1], axes.data)
+    def step(x, w):
+        v, g = jax.value_and_grad(loss, argnums=(0, 1))(x, w)
+        return v, g[0], M.psum(g[1], axes.data)
 
-        f = shard_map(step, mesh=mesh, in_specs=(xspec, wspec),
-                      out_specs=(P(), xspec, wspec), check_vma=False)
-        return jax.jit(f).lower(x, w).compile()
+    f = shard_map(step, mesh=mesh, in_specs=(xspec, wspec),
+                  out_specs=(P(), xspec, wspec), check_vma=False)
+    compiled = jax.jit(f).lower(x, w).compile()
+    return RL.parse_collectives(compiled.as_text())
 
-    blocking = RL.parse_collectives(build(base).as_text())
-    ring = RL.parse_collectives(
-        build(base.with_overlap(OverlapConfig.all_on())).as_text())
+
+def test_overlap_hlo_uses_collective_permute():
+    """Acceptance: the overlapped mode's HLO replaces the monolithic z
+    all-gather / reduce-scatter of the matmul path with collective-permute
+    chains."""
+    blocking = _tp_collective_counts(None)
+    ring = _tp_collective_counts(OverlapConfig(
+        matmul=True, batched_matmul=True, tied_logits=True))
     assert blocking.counts.get("all-gather", 0) >= 2
     assert blocking.counts.get("reduce-scatter", 0) >= 1
     assert blocking.counts.get("collective-permute", 0) == 0
@@ -240,6 +401,25 @@ def test_overlap_hlo_uses_collective_permute():
     est_r = RL.step_time_estimate(1e9, ring.bytes_by_kind)
     assert est_r.exposed_comm < est_b.exposed_comm
     assert est_r.hidden_comm > 0.0
+
+
+def test_ar_overlap_hlo_replaces_all_reduces():
+    """Acceptance (this PR): with ``all_reduce`` on, the x/y activation
+    all-reduces of the matmul fwd/bwd also become collective-permute
+    chains; only the loss-level psums stay all-reduce."""
+    ring_z = _tp_collective_counts(OverlapConfig(
+        matmul=True, batched_matmul=True, tied_logits=True))
+    ring_xy = _tp_collective_counts(OverlapConfig.all_on())
+    # the fwd (over x) and bwd dX (over y) activation all-reduces convert
+    # (mapped axes of size > 1 only: x is unmapped on the 4-device shape)
+    converts = sum(1 for p in SHAPE_Z[1:3] if p > 1)
+    assert (ring_xy.counts.get("all-reduce", 0)
+            <= ring_z.counts.get("all-reduce", 0) - converts), (
+        ring_z.counts, ring_xy.counts)
+    assert (ring_xy.counts.get("collective-permute", 0)
+            > ring_z.counts.get("collective-permute", 0))
+    assert ring_xy.counts.get("all-gather", 0) == 0
+    assert ring_xy.counts.get("reduce-scatter", 0) == 0
 
 
 # --------------------------------------------------------------------- #
@@ -257,6 +437,24 @@ def test_time_model_reduces_to_volume_model():
                 * hw.bytes_per_elem / hw.link_bw)
         assert abs(st.exposed_comm - want) <= 1e-9 * want
         assert st.hidden_comm == 0.0
+
+
+def test_time_model_conserves_volume_under_overlap():
+    """The ring knobs move time from exposed to hidden, never delete it:
+    at α = 0, exposed + hidden == volume * β for EVERY overlap config
+    (the shared layer_geometry keeps the two models in lockstep)."""
+    layers = CM.transformer_layers(2048, n_layers=4)
+    hw = CM.HardwareParams(alpha=0.0)
+    d = CM.Decomposition(4, 4, 4, 4)
+    for ov in [None, OverlapConfig.all_on(),
+               OverlapConfig(matmul=True),
+               OverlapConfig(all_reduce=True),
+               OverlapConfig.all_on(cache_weight_gather=True)]:
+        st = CM.predict_step_time(layers, 1 << 18, d, hw, overlap=ov)
+        want = (CM.model_volume(layers, 1 << 18, d, overlap=ov)
+                * hw.bytes_per_elem / hw.link_bw)
+        got = st.exposed_comm + st.hidden_comm
+        assert abs(got - want) <= 1e-9 * want, (ov, got, want)
 
 
 def test_time_model_monotone_in_volume():
@@ -279,21 +477,48 @@ def test_time_model_monotone_in_volume():
 
 
 def test_overlap_hides_z_traffic_only():
+    """The z-only ring knob hides z weight traffic and nothing else."""
     layers = CM.transformer_layers(4096, n_layers=8)
     d = CM.Decomposition(4, 2, 2, 8)
+    z_only = OverlapConfig(matmul=True, batched_matmul=True,
+                           tied_logits=True)
     blocking = CM.predict_step_time(layers, 1 << 20, d)
-    ring = CM.predict_step_time(layers, 1 << 20, d,
-                                overlap=OverlapConfig.all_on())
+    ring = CM.predict_step_time(layers, 1 << 20, d, overlap=z_only)
     assert ring.hidden_comm > 0.0
     assert ring.exposed_comm < blocking.exposed_comm
     # conservation: hiding moves time, it doesn't delete it
     assert (abs((ring.exposed_comm + ring.hidden_comm)
                 - blocking.exposed_comm) < 1e-12)
-    # z = 1 has nothing to hide
+    # z = 1 has nothing to hide under the z-only knob
     d1 = CM.Decomposition(4, 8, 8, 1)
-    r1 = CM.predict_step_time(layers, 1 << 20, d1,
-                              overlap=OverlapConfig.all_on())
+    r1 = CM.predict_step_time(layers, 1 << 20, d1, overlap=z_only)
     assert r1.hidden_comm == 0.0
+
+
+def test_overlap_hides_activation_all_reduces():
+    """The ``all_reduce`` knob hides x/y activation traffic — including
+    at g_z = 1, where the z knob has nothing to do — within the compute
+    window left over by the z rings."""
+    layers = CM.transformer_layers(4096, n_layers=8)
+    d1 = CM.Decomposition(4, 8, 8, 1)        # pure tensor-parallel point
+    blocking = CM.predict_step_time(layers, 1 << 20, d1)
+    ar = CM.predict_step_time(layers, 1 << 20, d1,
+                              overlap=OverlapConfig(all_reduce=True))
+    assert ar.hidden_comm > 0.0
+    assert ar.exposed_comm < blocking.exposed_comm
+    assert (abs((ar.exposed_comm + ar.hidden_comm)
+                - blocking.exposed_comm) < 1e-12)
+    # with both knobs, z traffic claims the window first; total hidden
+    # can only grow vs either knob alone
+    d = CM.Decomposition(4, 2, 2, 8)
+    z_only = CM.predict_step_time(
+        layers, 1 << 20, d, overlap=OverlapConfig(matmul=True))
+    both = CM.predict_step_time(layers, 1 << 20, d,
+                                overlap=OverlapConfig.all_on())
+    assert both.hidden_comm >= z_only.hidden_comm
+    # and never exceed the overlap-efficiency-scaled compute window
+    hw = CM.TPU_V5E
+    assert both.hidden_comm <= hw.overlap_efficiency * both.compute + 1e-12
 
 
 def test_time_model_ranks_eq7_optimum():

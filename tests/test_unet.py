@@ -6,11 +6,17 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from conftest import N_DEVICES
 from repro.core import mesh as M
 from repro.core.compat import shard_map
 from repro.core.partition import spec_tree_to_pspecs, unbox, z_reduce_grads
 from repro.launch import mesh as LM
 from repro.models import unet as U
+
+SHAPE0 = (2, 2, 2, 1) if N_DEVICES >= 8 else (1, 2, 2, 1)
+SHAPES_INV = ([(2, 2, 2, 1), (2, 1, 4, 1), (1, 2, 2, 2)]
+              if N_DEVICES >= 8
+              else [(1, 2, 2, 1), (2, 1, 2, 1), (1, 1, 2, 2)])
 
 
 def _run(mesh_shape, steps=3):
@@ -50,14 +56,14 @@ def _run(mesh_shape, steps=3):
 
 
 def test_unet_ddpm_trains():
-    losses = _run((2, 2, 2, 1))
+    losses = _run(SHAPE0)
     assert all(np.isfinite(losses))
     assert losses[-1] < losses[0]
 
 
 def test_unet_mesh_invariant():
-    l1 = _run((2, 2, 2, 1), steps=2)
-    l2 = _run((2, 1, 4, 1), steps=2)
-    l3 = _run((1, 2, 2, 2), steps=2)
+    l1 = _run(SHAPES_INV[0], steps=2)
+    l2 = _run(SHAPES_INV[1], steps=2)
+    l3 = _run(SHAPES_INV[2], steps=2)
     np.testing.assert_allclose(l1, l2, rtol=2e-4)
     np.testing.assert_allclose(l1, l3, rtol=2e-4)
