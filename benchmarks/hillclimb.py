@@ -34,6 +34,13 @@ def run_variant(arch, shape, variant, out):
         kw["remat_policy"] = "dots"
     elif variant == "cacheag":
         kw["cache_gather"] = True
+    elif variant == "zero":
+        # ZeRO-sharded DP sync (core/gradsync.py): bucketed ring
+        # reduce-scatter + data-sharded AdamW state
+        kw["zero"] = True
+    elif variant == "od2+zero":
+        kw["overdecompose"] = 2
+        kw["zero"] = True
     elif variant == "od2+dots":
         kw["overdecompose"] = 2
         kw["remat_policy"] = "dots"

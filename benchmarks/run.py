@@ -57,6 +57,7 @@ def main() -> None:
         "fig6": measured.fig6_validation,
         "overdecomp": measured.overdecomposition_overlap,
         "overlap": measured.overlap_collectives,
+        "dp_sync": measured.dp_sync,
         "kernels": measured.kernel_micro,
         "roofline": roofline_summary,
     }

@@ -1,2 +1,3 @@
 """npz pytree checkpointing with sharding metadata."""
-from repro.checkpoint.ckpt import restore, save
+from repro.checkpoint.ckpt import restore, restore_sharded, save, \
+    save_sharded

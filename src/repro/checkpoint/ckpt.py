@@ -43,13 +43,14 @@ def save(path: str, params, opt_state=None, *, step: int = 0,
     np.savez(path, __meta__=json.dumps(meta), **arrays)
 
 
-def restore(path: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (a pytree template)."""
+def restore(path: str, like, *, root: str = "params") -> Tuple[Any, int]:
+    """Restore the subtree saved under ``root`` into the structure of
+    ``like`` (a pytree template of arrays or ShapeDtypeStructs)."""
     data = np.load(path, allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
     leaves = []
     for path_, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
-        key = "params/" + "/".join(
+        key = root + "/" + "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
@@ -59,3 +60,37 @@ def restore(path: str, like) -> Tuple[Any, int]:
         leaves.append(arr.astype(leaf.dtype))
     tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
     return tree, int(meta["step"])
+
+
+# ---------------------------------------------------------------------- #
+# ZeRO-sharded optimizer state (core/gradsync.py)
+# ---------------------------------------------------------------------- #
+#
+# The on-disk format for the data-axis-sharded AdamW state is the
+# REPLICATED per-leaf layout (m/v/master with the param's global shape):
+# shard boundaries depend on the bucket plan, which depends on G_data, so
+# persisting raw shards would pin the checkpoint to one mesh. The
+# gather/scatter converters are the jitted shard_map helpers of
+# ``launch.steps.make_gradsync_tools`` — built against whatever mesh is
+# current on each side, which is exactly what lets a run saved at one
+# g_data resume at another.
+
+def save_sharded(path: str, params, sharded_state, gather_fn, *,
+                 step: int = 0, pspecs=None, extra: Optional[dict] = None
+                 ) -> None:
+    """Save params + a ZeRO-sharded opt state via its ``gather`` tool."""
+    full = jax.device_get(gather_fn(sharded_state))
+    save(path, params, full, step=step, pspecs=pspecs,
+         extra=dict(extra or {}, zero=True))
+
+
+def restore_sharded(path: str, like_params, like_full_state, scatter_fn
+                    ) -> Tuple[Any, Any, int]:
+    """Restore (params, sharded opt state, step); ``like_full_state`` is
+    a template of the replicated state layout (``optim.adamw.init_state``
+    abstract output) and ``scatter_fn`` the restoring mesh's scatter
+    tool — its bucket plan may come from a different g_data than the
+    saving run's."""
+    params, step = restore(path, like_params)
+    full, _ = restore(path, like_full_state, root="opt_state")
+    return params, scatter_fn(full), step

@@ -2,6 +2,8 @@
 primary contribution): mesh axis conventions, the communication model and
 decomposition optimizer, the tensor-parallel primitives with the paper's
 collective schedule, and the overdecomposition overlap machinery."""
-from repro.core import comm_model, mesh, overdecompose, parallel, partition
+from repro.core import comm_model, gradsync, mesh, overdecompose, \
+    parallel, partition
 
-__all__ = ["comm_model", "mesh", "overdecompose", "parallel", "partition"]
+__all__ = ["comm_model", "gradsync", "mesh", "overdecompose", "parallel",
+           "partition"]

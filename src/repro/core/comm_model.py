@@ -34,6 +34,7 @@ import itertools
 import math
 from typing import Iterable, List, Optional, Sequence, Tuple
 
+from repro.core.gradsync import GradSyncConfig
 from repro.core.overlap import OverlapConfig
 
 
@@ -106,6 +107,7 @@ class LayerGeometry:
     ar_bwd_buf: float      # bwd dX all-reduce over gy (Eq. 3)
     w_full_per_xy: float   # z-collective buffer: full weight per x*y shard
     n_gathers: int         # AG_z count (1 when the bwd re-gather is cached)
+    dp_buf: float          # DP gradient buffer per device (w / (x*y*z))
 
 
 def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
@@ -113,17 +115,42 @@ def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
     gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
     m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
     cached = bool(overlap and overlap.cache_weight_gather)
+    w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
     return LayerGeometry(
         gx=gx, gy=gy, m_local=m_local,
         ar_fwd_buf=m_local * ls.n / gy,
         ar_bwd_buf=m_local * ls.k / gx,
-        w_full_per_xy=ls.k * ls.n / (d.g_x * d.g_y),
-        n_gathers=1 if cached else 2)
+        w_full_per_xy=w_full_per_xy,
+        n_gathers=1 if cached else 2,
+        dp_buf=w_full_per_xy / d.g_z)
+
+
+def dp_sync_volume(p: int, buf: float,
+                   gradsync: Optional[GradSyncConfig] = None,
+                   microbatches: int = 1) -> float:
+    """Per-device DP gradient-sync volume (elements) for one layer's
+    gradient buffer ``buf``.
+
+    Blocking (no gradsync): one bandwidth-optimal all-reduce. Bucketed /
+    ZeRO (core/gradsync.py): one reduce-scatter per streamed microbatch
+    plus one all-gather (updated params under ``zero``, gradients
+    otherwise — same size). With ``stream`` off — or one microbatch —
+    this is RS + AG == exactly the all-reduce volume (the
+    Patarasuk-Yuan decomposition), so the bucketed path's volume
+    degenerates to the blocking one at the no-overlap point."""
+    if p <= 1:
+        return 0.0
+    if gradsync is None or not gradsync.enabled:
+        return allreduce_volume(p, buf)
+    n = microbatches if gradsync.stream else 1
+    return (n + 1) * gather_or_scatter_volume(p, buf)
 
 
 def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
                  overlap: Optional[OverlapConfig] = None,
-                 include_data_parallel: bool = True) -> float:
+                 include_data_parallel: bool = True,
+                 gradsync: Optional[GradSyncConfig] = None,
+                 microbatches: int = 1) -> float:
     """Per-GPU per-iteration volume (elements) for one layer, fwd+bwd.
 
     ``tokens`` is the *global* batch in tokens (B*S). Paper Eqs. 2-4 are the
@@ -133,6 +160,9 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     weight (one AG_z per layer). The ring decompositions themselves move
     the same bytes as the blocking collectives, so the other overlap knobs
     do not change *volume* — only :func:`predict_step_time` sees them.
+    ``gradsync``/``microbatches`` switch the DP term to the bucketed
+    schedule of :func:`dp_sync_volume` (streamed reduce-scatters *do*
+    change volume: one RS per microbatch).
     """
     g = layer_geometry(ls, tokens, d, overlap)
     # fwd all-reduce of partial outputs over the contraction axis (Eq. 2)
@@ -142,11 +172,11 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     # z-axis weight collectives (4D): AG fwd (+AG bwd if not cached) + RS bwd
     v_z = (g.n_gathers + 1) * gather_or_scatter_volume(d.g_z,
                                                        g.w_full_per_xy)
-    # data-parallel gradient all-reduce (the text measures it as 1e-3 of the
+    # data-parallel gradient sync (the text measures it as 1e-3 of the
     # tensor terms but we keep it for completeness)
     v_dp = 0.0
     if include_data_parallel:
-        v_dp = allreduce_volume(d.g_data, g.w_full_per_xy / d.g_z)
+        v_dp = dp_sync_volume(d.g_data, g.dp_buf, gradsync, microbatches)
     return ls.count * (v_fp + v_bp + v_z + v_dp)
 
 
@@ -256,10 +286,48 @@ class StepTime:
 ZERO_TIME = StepTime(0.0, 0.0, 0.0)
 
 
+def dp_sync_time(p: int, buf: float,
+                 gradsync: Optional[GradSyncConfig],
+                 microbatches: int, hw: HardwareParams
+                 ) -> Tuple[float, float]:
+    """(total, hideable) α-β time of one layer's DP gradient sync.
+
+    Blocking: one all-reduce, nothing hideable (it runs after the whole
+    microbatch loop). Bucketed/ZeRO: each streamed microbatch pays one
+    reduce-scatter pass of ``ceil(buf·bytes / bucket_bytes)`` ring
+    buckets — the bucket count is the α-latency knob: smaller buckets
+    mean finer overlap grain but more ring launches — plus the final
+    all-gather. The RS passes of the first ``microbatches - 1``
+    microbatches are *hideable*: each rides under the next microbatch's
+    backward (the last RS and the all-gather have no later compute in
+    the step to hide behind). Only ring mode is hideable — the blocking
+    psum_scatter is a synchronizing collective.
+
+    With α = 0 and nothing hideable (one microbatch, or ``stream`` off)
+    the total reduces exactly to ``dp_sync_volume · bytes / bw`` — the
+    degeneracy tests/test_gradsync.py pins."""
+    if p <= 1:
+        return 0.0, 0.0
+    if gradsync is None or not gradsync.enabled:
+        return collective_time("all_reduce", p, buf, hw), 0.0
+    n = microbatches if gradsync.stream else 1
+    n_buckets = max(1, math.ceil(buf * hw.bytes_per_elem
+                                 / max(gradsync.bucket_bytes, 1)))
+    t_pass = (hw.alpha * (p - 1) * n_buckets
+              + gather_or_scatter_volume(p, buf)
+              * hw.bytes_per_elem / hw.link_bw)
+    total = (n + 1) * t_pass  # n RS passes + the AG rebroadcast
+    hideable = (n - 1) * t_pass if (gradsync.ring and gradsync.stream
+                                    and microbatches > 1) else 0.0
+    return total, hideable
+
+
 def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
                hw: HardwareParams = TPU_V5E, *,
                overlap: Optional[OverlapConfig] = None,
-               include_data_parallel: bool = True) -> StepTime:
+               include_data_parallel: bool = True,
+               gradsync: Optional[GradSyncConfig] = None,
+               microbatches: int = 1) -> StepTime:
     """Overlap-aware α-β time of one layer, fwd+bwd (cf. layer_volume).
 
     Compute: 3 GEMMs (fwd Y, bwd dX, bwd dW) of 2·m·k·n/(gx·gy) flops
@@ -269,9 +337,13 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     ``overlap_efficiency``-scaled compute window the z weight rings
     (``overlap.matmul``) left over — the z collectives hide first, since
     their rings pipeline against the very GEMM that consumes/produces the
-    weight. Blocking mode keeps every collective fully exposed
-    (overdecomposition overlaps them *across* batch shards; that is a
-    step-level effect the dry-run measures, not modeled here)."""
+    weight. With ``gradsync`` streaming (core/gradsync.py) the DP
+    reduce-scatter rings claim whatever window is left after z and the
+    activation ARs (:func:`dp_sync_time`: the last microbatch's RS and
+    the param all-gather stay exposed). Blocking mode keeps every
+    collective fully exposed (overdecomposition overlaps them *across*
+    batch shards; that is a step-level effect the dry-run measures, not
+    modeled here)."""
     g = layer_geometry(ls, tokens, d, overlap)
     t_compute = 6.0 * g.m_local * ls.k * ls.n / (g.gx * g.gy) / hw.flops
     # activation all-reduces (Eqs. 2-3): 2(p-1) α-β ring steps each
@@ -281,10 +353,10 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     t_z = (g.n_gathers
            * collective_time("all_gather", d.g_z, g.w_full_per_xy, hw)
            + collective_time("reduce_scatter", d.g_z, g.w_full_per_xy, hw))
-    t_dp = 0.0
+    t_dp = dp_hideable = 0.0
     if include_data_parallel:
-        t_dp = collective_time("all_reduce", d.g_data,
-                               g.w_full_per_xy / d.g_z, hw)
+        t_dp, dp_hideable = dp_sync_time(d.g_data, g.dp_buf, gradsync,
+                                         microbatches, hw)
     window = hw.overlap_efficiency * t_compute
     hidden_z = (min(t_z, window)
                 if overlap is not None and overlap.matmul and d.g_z > 1
@@ -292,7 +364,8 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     hidden_ar = (min(t_act, window - hidden_z)
                  if overlap is not None and overlap.all_reduce
                  else 0.0)
-    hidden = hidden_z + hidden_ar
+    hidden_dp = min(dp_hideable, max(window - hidden_z - hidden_ar, 0.0))
+    hidden = hidden_z + hidden_ar + hidden_dp
     exposed = t_act + t_z + t_dp - hidden
     return StepTime(ls.count * t_compute, ls.count * exposed,
                     ls.count * hidden)
@@ -301,18 +374,25 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
 def predict_step_time(layers: Sequence[LayerShape], tokens: int,
                       d: Decomposition, hw: HardwareParams = TPU_V5E, *,
                       overlap: Optional[OverlapConfig] = None,
-                      include_data_parallel: bool = True) -> StepTime:
+                      include_data_parallel: bool = True,
+                      gradsync: Optional[GradSyncConfig] = None,
+                      microbatches: int = 1) -> StepTime:
     """Per-device per-iteration predicted time for a layer list (§5's
     analytical model, upgraded from volume to overlap-aware α-β time).
 
     With ``overlap=None`` (or all knobs off) and ``hw.alpha == 0`` the
     exposed-communication term equals
-    ``model_volume(...) * hw.bytes_per_elem / hw.link_bw`` exactly.
+    ``model_volume(...) * hw.bytes_per_elem / hw.link_bw`` exactly —
+    including the bucketed DP path of ``gradsync``, whose streamed
+    microbatch reduce-scatters only become *hidden* when there is a
+    later microbatch backward to ride under (``microbatches > 1`` with
+    ``stream``/``ring`` on; :func:`dp_sync_time`).
     """
     out = ZERO_TIME
     for ls in layers:
         out = out + layer_time(ls, tokens, d, hw, overlap=overlap,
-                               include_data_parallel=include_data_parallel)
+                               include_data_parallel=include_data_parallel,
+                               gradsync=gradsync, microbatches=microbatches)
     return out
 
 

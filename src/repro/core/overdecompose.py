@@ -22,15 +22,38 @@ import jax
 import jax.numpy as jnp
 
 
-def split_batch(batch, n_shards: int):
-    """Split every leaf of a batch pytree along axis 0 into n_shards."""
-    def s(x):
-        b = x.shape[0]
-        if b % n_shards:
-            raise ValueError(f"local batch {b} not divisible by "
-                             f"overdecomposition factor {n_shards}")
-        return x.reshape(n_shards, b // n_shards, *x.shape[1:])
-    return jax.tree.map(s, batch)
+def split_batch(batch, n_shards: int, *, axes=None):
+    """Split every leaf of a batch pytree along axis 0 into n_shards.
+
+    Inside a shard_map'd train step the leaves are the *per-shard* batch
+    (global batch / (G_data × G_z)); a non-dividing shape is a config
+    error, so it is reported with the offending leaf and the global
+    divisibility rule instead of surfacing as a reshape failure deep in
+    the microbatch loop. ``axes`` (a ``mesh.MeshAxes``) is optional
+    context used only to phrase that error in global-batch terms."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    for path, x in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path) or "<batch>"
+        if not getattr(x, "ndim", 0):
+            raise ValueError(
+                f"overdecompose={n_shards}: batch leaf {name!r} is a "
+                f"scalar — every leaf needs a leading batch dim to split")
+        if x.shape[0] % n_shards:
+            hint = ""
+            if axes is not None:
+                bs = axes.batch_shards
+                hint = (f" (global batch = {x.shape[0] * bs} over "
+                        f"{bs} data×z batch shards; the global batch "
+                        f"must be divisible by batch_shards × "
+                        f"overdecompose = {bs * n_shards})")
+            raise ValueError(
+                f"overdecompose={n_shards}: per-shard batch {x.shape[0]} "
+                f"of leaf {name!r} is not divisible by the "
+                f"overdecomposition factor{hint}")
+    return jax.tree.unflatten(
+        treedef, [x.reshape(n_shards, x.shape[0] // n_shards, *x.shape[1:])
+                  for _, x in flat])
 
 
 def overdecomposed_value_and_grad(loss_fn: Callable, n_shards: int = 2):

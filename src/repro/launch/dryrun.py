@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED, SHAPES, get_config, skip_reason
+from repro.core.gradsync import GradSyncConfig
 from repro.core.overlap import OverlapConfig
 from repro.core.partition import spec_tree_to_pspecs
 from repro.launch import mesh as LM
@@ -82,19 +83,24 @@ def input_specs(cfg, axes, mesh, shape, *, seqshard=False):
 def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
                   overdecompose: int, xent_chunks: int, seqshard: bool,
                   remat_policy: str = "full",
-                  overlap: OverlapConfig = OverlapConfig()):
+                  overlap: OverlapConfig = OverlapConfig(),
+                  gradsync: GradSyncConfig = GradSyncConfig()):
     """Lower the step for this shape kind; returns the Lowered object."""
     ins = input_specs(cfg, axes, mesh, shape, seqshard=seqshard)
     if shape.kind == "train":
+        topts = ST.TrainOptions(overdecompose=overdecompose,
+                                xent_chunks=xent_chunks,
+                                unroll_layers=unroll,
+                                remat_policy=remat_policy, overlap=overlap,
+                                gradsync=gradsync)
         step, pspecs, spspecs = ST.make_train_step(
-            cfg, mesh, axes, OPT.AdamWConfig(),
-            ST.TrainOptions(overdecompose=overdecompose,
-                            xent_chunks=xent_chunks, unroll_layers=unroll,
-                            remat_policy=remat_policy, overlap=overlap))
+            cfg, mesh, axes, OPT.AdamWConfig(), topts)
         params, _ = ST.init_model(cfg, axes, abstract=True)
         params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
                               params, pspecs)
-        state = OPT.init_state(params, abstract=True)
+        # the state layout (ZeRO-sharded buckets vs per-leaf replicated)
+        # follows the gradsync config
+        state = ST.abstract_opt_state(cfg, axes, topts)
         sstructs = jax.tree.map(
             lambda st, sp: _sharded_struct(mesh, st, sp), state, spspecs)
         return step.lower(params, sstructs, ins)
@@ -167,15 +173,19 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               multi_pod: bool = False, xent_chunks: int = 0,
               overdecompose: int = 1, factors=None, probe: bool = True,
               remat_policy: str = "full", cache_gather: bool = False,
-              overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1):
+              overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1,
+              zero: bool = False, dp_bucket_mb: float = 4.0):
     # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
     z_chunks = z_chunks if overlap else 1
     ar_chunks = ar_chunks if overlap else 1
+    dp_bucket_mb = dp_bucket_mb if zero else 0.0  # inert without --zero
     ov = (OverlapConfig.all_on(z_chunks=z_chunks, ar_chunks=ar_chunks,
                                cache_weight_gather=cache_gather)
           if overlap else OverlapConfig(cache_weight_gather=cache_gather))
+    gs = (GradSyncConfig(zero=True, bucket_mb=dp_bucket_mb)
+          if zero else GradSyncConfig())
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     seqshard = shape.seqshard
@@ -198,7 +208,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         xent_chunks = 4 if cfg.vocab_size >= 100_000 else 1
     n_dev = mesh.devices.size
     kw = dict(overdecompose=overdecompose, xent_chunks=xent_chunks,
-              seqshard=seqshard, remat_policy=remat_policy, overlap=ov)
+              seqshard=seqshard, remat_policy=remat_policy, overlap=ov,
+              gradsync=gs)
 
     # (1) the REAL scan-based program: must lower+compile; memory analysis
     t0 = time.time()
@@ -257,6 +268,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
         "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
+        "zero": zero, "dp_bucket_mb": dp_bucket_mb,
         "compile_s": round(compile_s, 1), "probe_s": round(probe_s, 1),
         "memory": mem,
         "roofline": roof,
@@ -357,6 +369,14 @@ def main():
     ap.add_argument("--ar-chunks", type=int, default=1,
                     help="sub-rings per scattered block of the x/y "
                          "activation all-reduces (with --overlap)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-sharded data-parallel sync: bucketed "
+                         "gradient reduce-scatter rings streamed through "
+                         "the overdecompose loop + AdamW state sharded "
+                         "over the data axis (core/gradsync.py)")
+    ap.add_argument("--dp-bucket-mb", type=float, default=4.0,
+                    help="fp32 gradient bucket size bound in MiB "
+                         "(with --zero)")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip depth-probe lowerings (multi-pod pass: the "
                          "compile proof only, roofline terms from the "
@@ -371,6 +391,7 @@ def main():
     pods = [False, True] if args.both_pods else [args.multi_pod]
     z_chunks = args.z_chunks if args.overlap else 1  # inert without ring
     ar_chunks = args.ar_chunks if args.overlap else 1
+    dp_bucket_mb = args.dp_bucket_mb if args.zero else 0.0
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -383,7 +404,9 @@ def main():
                               r["multi_pod"], r.get("overdecompose", 1),
                               r.get("overlap", False),
                               r.get("z_chunks", 1),
-                              r.get("ar_chunks", 1)))
+                              r.get("ar_chunks", 1),
+                              r.get("zero", False),
+                              r.get("dp_bucket_mb", 0.0)))
                 except Exception:
                     pass
 
@@ -396,18 +419,21 @@ def main():
             for mk in meshes:
                 for mp in pods:
                     key = (arch, shape, mk, mp, args.overdecompose,
-                           args.overlap, z_chunks, ar_chunks)
+                           args.overlap, z_chunks, ar_chunks,
+                           args.zero, dp_bucket_mb)
                     if key in done:
                         print(f"cached {key}")
                         continue
                     print(f"=== {arch} {shape} {mk} multi_pod={mp} "
-                          f"overlap={args.overlap}", flush=True)
+                          f"overlap={args.overlap} zero={args.zero}",
+                          flush=True)
                     try:
                         rec, compiled = lower_one(
                             arch, shape, mk, multi_pod=mp,
                             overdecompose=args.overdecompose,
                             overlap=args.overlap, z_chunks=z_chunks,
-                            ar_chunks=ar_chunks,
+                            ar_chunks=ar_chunks, zero=args.zero,
+                            dp_bucket_mb=args.dp_bucket_mb,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -423,6 +449,8 @@ def main():
                                "overlap": args.overlap,
                                "z_chunks": z_chunks,
                                "ar_chunks": ar_chunks,
+                               "zero": args.zero,
+                               "dp_bucket_mb": dp_bucket_mb,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

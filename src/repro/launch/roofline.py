@@ -31,10 +31,11 @@ HBM_BW = 819e9
 ICI_BW = CM.TPU_V5E.link_bw
 
 # what the compiled-HLO step-time estimate treats as overlappable: the
-# ring-decomposed collectives — z weight AG/RS rings AND the x/y
-# activation all-reduce (RS+AG) rings — all lower to collective-permute
-# chains whose hops interleave with the per-chunk GEMMs; everything else
-# blocks
+# ring-decomposed collectives — z weight AG/RS rings, the x/y activation
+# all-reduce (RS+AG) rings AND the data-parallel gradient bucket rings of
+# core/gradsync.py — all lower to collective-permute chains whose hops
+# interleave with compute (per-chunk GEMMs / the next microbatch's
+# backward); everything else blocks
 OVERLAPPABLE_COLLECTIVES = ("collective-permute",)
 
 _DTYPE_BYTES = {
@@ -88,15 +89,30 @@ class CollectiveStats:
         return sum(self.bytes_by_kind.values())
 
 
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    counts: Dict[str, int] = {}
-    vol: Dict[str, float] = {}
-    seen_start = set()
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction of the optimized HLO: op kind, replica
+    group size, raw result bytes, and the bandwidth-optimal effective
+    per-device wire bytes. ``group_size`` lets callers attribute an op to
+    a mesh axis (e.g. the dp_sync benchmark asserting no all-reduce of
+    data-axis group size remains on the gradient path)."""
+
+    kind: str
+    group_size: int
+    raw_bytes: int
+    wire_bytes: float
+
+
+def parse_collective_ops(hlo_text: str) -> List[CollectiveOp]:
+    """Every collective op of the HLO as a :class:`CollectiveOp` (ops
+    with group size <= 1 are dropped; ``-done`` halves of async pairs are
+    skipped — the ``-start`` carries the shape)."""
+    out: List[CollectiveOp] = []
     for m in _COLL_RE.finditer(hlo_text):
         type_str, kind = m.group(1), m.group(2)
         line = hlo_text[m.start():hlo_text.find("\n", m.start())]
         if "-done(" in line:
-            continue  # the -start carries the shape
+            continue
         p = _group_size(line)
         if p <= 1:
             continue
@@ -111,8 +127,16 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
             eff = (p - 1) / p * nbytes
         else:  # collective-permute
             eff = float(nbytes)
-        counts[kind] = counts.get(kind, 0) + 1
-        vol[kind] = vol.get(kind, 0.0) + eff
+        out.append(CollectiveOp(kind, p, nbytes, eff))
+    return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    vol: Dict[str, float] = {}
+    for op in parse_collective_ops(hlo_text):
+        counts[op.kind] = counts.get(op.kind, 0) + 1
+        vol[op.kind] = vol.get(op.kind, 0.0) + op.wire_bytes
     return CollectiveStats(counts, vol)
 
 

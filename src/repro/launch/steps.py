@@ -16,9 +16,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import gradsync as GS
 from repro.core import mesh as M
 from repro.core.compat import shard_map
 from repro.core import parallel as PP
+from repro.core.gradsync import GradSyncConfig
 from repro.core.overdecompose import split_batch
 from repro.core.overlap import OverlapConfig
 from repro.core.partition import ParamSpec, spec_tree_to_pspecs, unbox, \
@@ -101,6 +103,10 @@ class TrainOptions:
     # ring-decomposed collective matmuls + weight-gather caching
     # (core/overlap.py; rides down to the layers via axes.with_overlap)
     overlap: OverlapConfig = OverlapConfig()
+    # data-parallel gradient sync: bucketed ring reduce-scatter streamed
+    # through the overdecompose loop, optionally with ZeRO-1 data-axis
+    # sharding of the AdamW state (core/gradsync.py)
+    gradsync: GradSyncConfig = GradSyncConfig()
 
 
 def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions):
@@ -130,9 +136,14 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     jitted_step(params, opt_state, batch) -> (params, opt_state, metrics).
     """
     axes = axes.with_overlap(opts.overlap)
-    _, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     pspecs = spec_tree_to_pspecs(specs)
-    spspecs = OPT.state_pspecs(pspecs)
+    gs = opts.gradsync
+    plan = (GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                         no_decay=OPT._no_decay)
+            if gs.enabled else None)
+    spspecs = (GS.sharded_state_pspecs(plan, axes) if gs.zero
+               else OPT.state_pspecs(pspecs))
     loss_fn = _loss_fn(cfg, axes, opts)
 
     def scalar_loss(params, batch):
@@ -141,30 +152,70 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
 
     def step(params, opt_state, batch):
         vg = jax.value_and_grad(scalar_loss, has_aux=True)
-        if opts.overdecompose > 1:
-            shards = split_batch(batch, opts.overdecompose)
+        n = opts.overdecompose
+        stream = gs.enabled and gs.stream
+        shards = None
+        if n > 1:
+            mb = split_batch(batch, n, axes=axes)
             loss = metrics = grads = None
-            for i in range(opts.overdecompose):
-                sub = jax.tree.map(lambda x: x[i], shards)
+            for i in range(n):
+                sub = jax.tree.map(lambda x: x[i], mb)
                 (li, mi), gi = vg(params, sub)
                 loss = li if loss is None else loss + li
                 metrics = mi if metrics is None else jax.tree.map(
                     jnp.add, metrics, mi)
-                grads = gi if grads is None else jax.tree.map(
-                    jnp.add, grads, gi)
-            n = opts.overdecompose
+                if stream:
+                    # bucket i's reduce-scatter launches here; microbatch
+                    # i+1's backward (next vg call) has no data dependency
+                    # on these ring hops, so the latency-hiding scheduler
+                    # can run the DP rings under its GEMMs — the same
+                    # overlap window the x/y/z rings use. fp32 shard
+                    # accumulation doubles as the mixed-precision fix.
+                    si = GS.reduce_scatter_grads(gi, plan, axes,
+                                                 ring=gs.ring)
+                    shards = (si if shards is None
+                              else [a + b for a, b in zip(shards, si)])
+                else:
+                    # accumulate in fp32: bf16 running sums lose ~1 ulp
+                    # per add, which compounds as overdecompose grows
+                    grads = (jax.tree.map(
+                        lambda g: g.astype(jnp.float32), gi)
+                        if grads is None else jax.tree.map(
+                            lambda a, g: a + g.astype(jnp.float32),
+                            grads, gi))
             loss = loss / n
             metrics = jax.tree.map(lambda v: v / n, metrics)
-            grads = jax.tree.map(lambda g: g / n, grads)
+            if stream:
+                shards = [s / n for s in shards]
+            else:
+                grads = jax.tree.map(lambda g: g / n, grads)
         else:
             (loss, metrics), grads = vg(params, batch)
 
-        # data-parallel gradient all-reduce (paper §3.1) + z reduction for
-        # params whose grads are not already z-reduced by their custom vjp
-        grads = jax.tree.map(lambda g: M.psum(g, axes.data), grads)
-        grads = z_reduce_grads(grads, specs, axes, M.psum)
-        params, opt_state, om = OPT.apply_updates(params, grads, opt_state,
-                                                  specs, axes, opt_cfg)
+        if gs.enabled:
+            # bucketed data-parallel sync (core/gradsync.py): scattered
+            # fp32 shards + whole-bucket y/z reductions in place of the
+            # per-leaf blocking psums
+            if shards is None:
+                shards = GS.reduce_scatter_grads(grads, plan, axes,
+                                                 ring=gs.ring)
+            shards = GS.tensor_reduce_shards(shards, plan, axes)
+            if gs.zero:
+                params, opt_state, om = OPT.apply_updates_sharded(
+                    shards, opt_state, plan, axes, opt_cfg, ring=gs.ring)
+            else:
+                grads = GS.all_gather_grads(shards, plan, axes,
+                                            ring=gs.ring)
+                params, opt_state, om = OPT.apply_updates(
+                    params, grads, opt_state, specs, axes, opt_cfg)
+        else:
+            # data-parallel gradient all-reduce (paper §3.1) + z reduction
+            # for params whose grads are not already z-reduced by their
+            # custom vjp
+            grads = jax.tree.map(lambda g: M.psum(g, axes.data), grads)
+            grads = z_reduce_grads(grads, specs, axes, M.psum)
+            params, opt_state, om = OPT.apply_updates(
+                params, grads, opt_state, specs, axes, opt_cfg)
         metrics = dict(metrics, loss=loss, **om)
         return params, opt_state, metrics
 
@@ -182,6 +233,70 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
         out_specs=(pspecs, spspecs, {k: mspec for k in mkeys}),
         check_vma=False)
     return jax.jit(mapped, donate_argnums=(0, 1)), pspecs, spspecs
+
+
+# ---------------------------------------------------------------------- #
+# optimizer-state builders (replicated AdamW vs ZeRO-1 data-sharded)
+# ---------------------------------------------------------------------- #
+
+def abstract_opt_state(cfg: ArchConfig, axes: M.MeshAxes,
+                       opts: TrainOptions = TrainOptions()):
+    """GLOBAL-shaped ShapeDtypeStructs of the optimizer state the train
+    step of ``opts`` expects — the sharded-bucket layout under
+    ``gradsync.zero``, the replicated per-leaf layout otherwise. The
+    dry-run pairs this with ``make_train_step``'s ``spspecs``."""
+    axes = axes.with_overlap(opts.overlap)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    gs = opts.gradsync
+    if gs.zero:
+        plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                            no_decay=OPT._no_decay)
+        return GS.abstract_sharded_state(plan, axes)
+    return OPT.init_state(structs, abstract=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradSyncTools:
+    """Jitted companions of a ZeRO-sharded train step.
+
+    ``init(params)`` builds the scattered fp32 state;
+    ``gather(state)`` / ``scatter(full_state)`` convert to/from the
+    replicated per-leaf layout (the checkpoint format — ckpt.py
+    save_sharded/restore_sharded); ``plan`` / ``state_pspecs`` are the
+    bucket layout and shard_map specs the step was built with."""
+
+    plan: Any
+    state_pspecs: Any
+    init: Callable
+    gather: Callable
+    scatter: Callable
+
+
+def make_gradsync_tools(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
+                        opts: TrainOptions = TrainOptions()
+                        ) -> GradSyncTools:
+    """Build the ZeRO state helpers for the same (cfg, mesh, axes, opts)
+    a train step was made with (the bucket plan must match)."""
+    axes = axes.with_overlap(opts.overlap)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    gs = opts.gradsync
+    plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                        no_decay=OPT._no_decay)
+    sspecs = GS.sharded_state_pspecs(plan, axes)
+    fullspecs = OPT.state_pspecs(pspecs)
+    init = shard_map(lambda p: GS.init_sharded_state(p, plan, axes),
+                     mesh=mesh, in_specs=(pspecs,), out_specs=sspecs,
+                     check_vma=False)
+    gather = shard_map(lambda s: GS.gather_sharded_state(s, plan, axes),
+                       mesh=mesh, in_specs=(sspecs,), out_specs=fullspecs,
+                       check_vma=False)
+    scatter = shard_map(lambda s: GS.scatter_full_state(s, plan, axes),
+                        mesh=mesh, in_specs=(fullspecs,), out_specs=sspecs,
+                        check_vma=False)
+    return GradSyncTools(plan=plan, state_pspecs=sspecs,
+                         init=jax.jit(init), gather=jax.jit(gather),
+                         scatter=jax.jit(scatter))
 
 
 # ---------------------------------------------------------------------- #

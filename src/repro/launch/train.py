@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs import get_config
+from repro.core.gradsync import GradSyncConfig
 from repro.core.partition import spec_tree_to_pspecs
 from repro.data.synthetic import DataConfig, SyntheticText, make_batch
 from repro.launch import mesh as LM
@@ -64,6 +65,13 @@ def main():
     ap.add_argument("--mesh", default="2,2,2,1",
                     help="g_data,g_x,g_y,g_z over host devices")
     ap.add_argument("--overdecompose", type=int, default=2)
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-sharded DP sync: bucketed gradient "
+                         "reduce-scatter rings streamed through the "
+                         "overdecompose loop, AdamW state sharded over "
+                         "the data axis (core/gradsync.py)")
+    ap.add_argument("--dp-bucket-mb", type=float, default=4.0,
+                    help="fp32 gradient bucket bound in MiB (with --zero)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--ckpt", default="")
@@ -85,12 +93,16 @@ def main():
 
     pspecs = spec_tree_to_pspecs(specs)
     params = ST.device_put_tree(mesh, params, pspecs)
-    state = init_state(params)
+    gs = (GradSyncConfig(zero=True, bucket_mb=args.dp_bucket_mb)
+          if args.zero else GradSyncConfig())
+    topts = ST.TrainOptions(overdecompose=args.overdecompose, dtype=dtype,
+                            gradsync=gs)
+    tools = ST.make_gradsync_tools(cfg, mesh, axes, topts) if gs.zero \
+        else None
+    state = tools.init(params) if gs.zero else init_state(params)
     opt = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
                       total_steps=args.steps)
-    step_fn, _, _ = ST.make_train_step(
-        cfg, mesh, axes, opt,
-        ST.TrainOptions(overdecompose=args.overdecompose, dtype=dtype))
+    step_fn, _, _ = ST.make_train_step(cfg, mesh, axes, opt, topts)
 
     data = SyntheticText(DataConfig(vocab_size=cfg.vocab_size,
                                     seq_len=args.seq,
@@ -118,8 +130,15 @@ def main():
             assert np.isfinite(loss), "NaN loss"
 
     if args.ckpt:
-        ckpt.save(args.ckpt, jax.tree.map(np.asarray, params), step=step,
-                  pspecs=pspecs)
+        if gs.zero:
+            # sharded opt state travels in the replicated (per-leaf)
+            # layout so the run can resume under a different g_data
+            ckpt.save_sharded(args.ckpt, jax.tree.map(np.asarray, params),
+                              state, tools.gather, step=step, pspecs=pspecs,
+                              extra={"dp_bucket_mb": args.dp_bucket_mb})
+        else:
+            ckpt.save(args.ckpt, jax.tree.map(np.asarray, params),
+                      step=step, pspecs=pspecs)
         print("saved", args.ckpt)
     if args.log_file:
         os.makedirs(os.path.dirname(args.log_file) or ".", exist_ok=True)

@@ -10,6 +10,13 @@ recorded in DESIGN.md §7).
 
 Gradients arrive at ``apply_updates`` already reduced over ``data`` (and
 ``z`` where required) by the train step.
+
+:func:`apply_updates_sharded` is the ZeRO-1 variant on top of
+:mod:`repro.core.gradsync`: gradients arrive as data-axis-scattered fp32
+bucket shards, each rank updates only its ``1/G_data`` slice of the fp32
+state, and the caller rebroadcasts the updated params with a ring
+all-gather — the same per-element math, so the two paths agree bitwise on
+exactly-summable values (tests/test_gradsync.py pins this).
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import gradsync as GS
 from repro.core import mesh as M
 from repro.core.partition import ParamSpec
 
@@ -137,4 +145,44 @@ def apply_updates(params, grads, state, specs, axes: M.MeshAxes,
     params = jax.tree.unflatten(treedef, new_p)
     opt = jax.tree.unflatten(treedef, new_s)
     return params, {"opt": opt, "step": step + 1}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_updates_sharded(shards, state, plan, axes: M.MeshAxes,
+                          cfg: AdamWConfig, *, ring: bool = True):
+    """One ZeRO-1 AdamW step on data-axis-scattered gradient shards.
+
+    ``shards`` are the per-bucket fp32 gradients (already reduced over
+    data/z/y, scaled by 1/microbatches); ``state`` holds m/v/master only
+    for this rank's shard of each bucket (``gradsync.init_sharded_state``).
+    Element-wise math is identical to :func:`apply_updates`; weight decay
+    uses the plan's per-element group-id masks in place of the per-leaf
+    path check. Returns (new_params, new_state, metrics); the new params
+    are rebuilt wholesale from the updated master shards by the ring
+    all-gather (the old params are not read — their buffers stay
+    donatable)."""
+    step = state["step"]
+    lr = lr_at(cfg, step)
+    gnorm = GS.sharded_grad_norm(shards, plan, axes)
+    scale = (jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+             if cfg.grad_clip else jnp.float32(1.0))
+    t = step.astype(jnp.float32) + 1
+
+    new_buckets, masters = [], []
+    for b, g, st in zip(plan.buckets, shards, state["buckets"]):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * st["m"] + (1 - cfg.b1) * gf
+        v = cfg.b2 * st["v"] + (1 - cfg.b2) * gf * gf
+        mhat = m / (1 - cfg.b1 ** t)
+        vhat = v / (1 - cfg.b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            mask = GS.decay_mask(b, GS.gid_shard(plan, b, axes))
+            upd = upd + cfg.weight_decay * st["master"] * mask
+        master = st["master"] - lr * upd
+        masters.append(master)
+        new_buckets.append({"m": m, "v": v, "master": master})
+
+    params = GS.rebuild_params(masters, plan, axes, ring=ring)
+    return params, {"buckets": new_buckets, "step": step + 1}, \
         {"grad_norm": gnorm, "lr": lr}
