@@ -10,19 +10,23 @@ Variants (each an explicit, named change against the pair's baseline):
   od2          + overdecomposition=2 (paper §4.2)
   dots         + remat policy "dots" (save matmul outputs; beyond-paper)
   cacheag      + cached weight gather (1 AG_z instead of 2; beyond-paper)
+  zero         + ZeRO-1 DP sync (bucketed grad rings, sharded AdamW)
+  zero3        + ZeRO-3 param-shard streaming (per-layer JIT gathers)
+  zero3_prefetch   zero3 with next-layer prefetch/retention
   factors=a,b,c,d   explicit decomposition override
-Results append runs/perf/hillclimb.jsonl.
+Results append runs/perf/hillclimb.jsonl (per-rank param+optimizer
+bytes land next to the step-time roofline in every record).
 """
 import argparse
 import json
 import os
 
 
-def run_variant(arch, shape, variant, out):
+def run_variant(arch, shape, variant, out, probe=True):
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=512")
     from repro.launch import dryrun as DR
-    kw = dict(probe=True)
+    kw = dict(probe=probe)
     mesh = "tensor4d"
     if variant == "paper1d":
         mesh = "baseline-1d"
@@ -38,9 +42,19 @@ def run_variant(arch, shape, variant, out):
         # ZeRO-sharded DP sync (core/gradsync.py): bucketed ring
         # reduce-scatter + data-sharded AdamW state
         kw["zero"] = True
+    elif variant == "zero3":
+        # ZeRO-3 (core/gradsync.py): params live as 1/G_data shards,
+        # per-layer working copies streamed through the layer scan
+        kw["zero3"] = True
+    elif variant == "zero3_prefetch":
+        kw["zero3"] = True
+        kw["zero3_prefetch"] = True
     elif variant == "od2+zero":
         kw["overdecompose"] = 2
         kw["zero"] = True
+    elif variant == "od2+zero3":
+        kw["overdecompose"] = 2
+        kw["zero3"] = True
     elif variant == "od2+dots":
         kw["overdecompose"] = 2
         kw["remat_policy"] = "dots"
@@ -61,7 +75,9 @@ def run_variant(arch, shape, variant, out):
     print(f"{arch} {shape} {variant}: ct={r['compute_t']:.3f} "
           f"mt={r['memory_t']:.3f} lt={r['collective_t']:.3f} "
           f"dom={r['dominant']} useful={r['useful_ratio']:.2f} "
-          f"mem={rec['memory'].get('total_per_device_bytes', 0)/1e9:.1f}GB",
+          f"mem={rec['memory'].get('total_per_device_bytes', 0)/1e9:.1f}GB "
+          f"param+opt/rank="
+          f"{rec['memory'].get('param_opt_bytes_per_rank', 0)/1e9:.2f}GB",
           flush=True)
     return rec
 
@@ -71,11 +87,14 @@ def main():
     ap.add_argument("--pair", required=True, help="arch:shape")
     ap.add_argument("--variant", action="append", required=True)
     ap.add_argument("--out", default="runs/perf/hillclimb.jsonl")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the depth-probe lowerings (CI smoke: the "
+                         "compile proof + memory accounting only)")
     args = ap.parse_args()
     arch, shape = args.pair.split(":")
     for v in args.variant:
         try:
-            run_variant(arch, shape, v, args.out)
+            run_variant(arch, shape, v, args.out, probe=not args.no_probe)
         except Exception as e:
             print(f"{arch} {shape} {v}: FAILED {type(e).__name__}: {e}",
                   flush=True)

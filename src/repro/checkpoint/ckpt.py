@@ -69,8 +69,10 @@ def restore(path: str, like, *, root: str = "params") -> Tuple[Any, int]:
 # The on-disk format for the data-axis-sharded AdamW state is the
 # REPLICATED per-leaf layout (m/v/master with the param's global shape):
 # shard boundaries depend on the bucket plan, which depends on G_data, so
-# persisting raw shards would pin the checkpoint to one mesh. The
-# gather/scatter converters are the jitted shard_map helpers of
+# persisting raw shards would pin the checkpoint to one mesh. The same
+# rule covers ZeRO-3 param shards: callers unshard the param tree before
+# ``save_sharded`` and re-shard after restore. The gather/scatter (and
+# zero3 shard/unshard) converters are the jitted shard_map helpers of
 # ``launch.steps.make_gradsync_tools`` — built against whatever mesh is
 # current on each side, which is exactly what lets a run saved at one
 # g_data resume at another.

@@ -128,20 +128,32 @@ def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
 def dp_sync_volume(p: int, buf: float,
                    gradsync: Optional[GradSyncConfig] = None,
                    microbatches: int = 1) -> float:
-    """Per-device DP gradient-sync volume (elements) for one layer's
-    gradient buffer ``buf``.
+    """Per-device DP param/gradient-sync volume (elements) for one
+    layer's weight buffer ``buf``.
 
     Blocking (no gradsync): one bandwidth-optimal all-reduce. Bucketed /
-    ZeRO (core/gradsync.py): one reduce-scatter per streamed microbatch
-    plus one all-gather (updated params under ``zero``, gradients
-    otherwise — same size). With ``stream`` off — or one microbatch —
-    this is RS + AG == exactly the all-reduce volume (the
+    ZeRO-1 (core/gradsync.py): one reduce-scatter per streamed
+    microbatch plus one all-gather (updated params under ``zero``,
+    gradients otherwise — same size). With ``stream`` off — or one
+    microbatch — this is RS + AG == exactly the all-reduce volume (the
     Patarasuk-Yuan decomposition), so the bucketed path's volume
-    degenerates to the blocking one at the no-overlap point."""
+    degenerates to the blocking one at the no-overlap point.
+
+    ZeRO-3 (``zero3``): every microbatch's forward all-gathers each
+    layer's params just-in-time and its backward re-gathers them (remat)
+    and reduce-scatters the gradient via the gather's transpose — per
+    microbatch: 2 AG + 1 RS, or 1 AG + 1 RS with ``prefetch`` (the
+    forward's working copy is retained for the backward). There is no
+    trailing param rebroadcast (the update writes shards). At one
+    microbatch with prefetch this is again AG + RS == the all-reduce
+    volume — ZeRO-3's volume floor is the blocking one."""
     if p <= 1:
         return 0.0
     if gradsync is None or not gradsync.enabled:
         return allreduce_volume(p, buf)
+    if gradsync.zero3:
+        per_mb = (2 if gradsync.prefetch else 3)  # AG [+AG regather] + RS
+        return microbatches * per_mb * gather_or_scatter_volume(p, buf)
     n = microbatches if gradsync.stream else 1
     return (n + 1) * gather_or_scatter_volume(p, buf)
 
@@ -290,10 +302,10 @@ def dp_sync_time(p: int, buf: float,
                  gradsync: Optional[GradSyncConfig],
                  microbatches: int, hw: HardwareParams
                  ) -> Tuple[float, float]:
-    """(total, hideable) α-β time of one layer's DP gradient sync.
+    """(total, hideable) α-β time of one layer's DP param/gradient sync.
 
     Blocking: one all-reduce, nothing hideable (it runs after the whole
-    microbatch loop). Bucketed/ZeRO: each streamed microbatch pays one
+    microbatch loop). Bucketed/ZeRO-1: each streamed microbatch pays one
     reduce-scatter pass of ``ceil(buf·bytes / bucket_bytes)`` ring
     buckets — the bucket count is the α-latency knob: smaller buckets
     mean finer overlap grain but more ring launches — plus the final
@@ -303,22 +315,50 @@ def dp_sync_time(p: int, buf: float,
     the step to hide behind). Only ring mode is hideable — the blocking
     psum_scatter is a synchronizing collective.
 
-    With α = 0 and nothing hideable (one microbatch, or ``stream`` off)
-    the total reduces exactly to ``dp_sync_volume · bytes / bw`` — the
-    degeneracy tests/test_gradsync.py pins."""
+    ZeRO-3 (``zero3``): ``dp_sync_volume``'s per-microbatch AG/RS passes
+    stream *per layer* through the scan, so every pass except the step's
+    first param gather (nothing earlier to ride under) and the last
+    gradient RS (nothing later) is hideable under the layer compute
+    window.
+
+    ``cross_step`` widens the window across the step boundary: the
+    terminal collectives — the ZeRO-1 param all-gather / ZeRO-3 leading
+    param gather (they hide under the NEXT step's first-microbatch
+    forward) and the last RS pass (it hides under the optimizer math) —
+    become hideable too. With ``cross_step`` off this function is
+    exactly the PR-3 exposed model, and with α = 0 and nothing hideable
+    (one microbatch, or ``stream`` off) the total reduces exactly to
+    ``dp_sync_volume · bytes / bw`` — degeneracies
+    tests/test_gradsync.py and tests/test_zero3.py pin."""
     if p <= 1:
         return 0.0, 0.0
     if gradsync is None or not gradsync.enabled:
         return collective_time("all_reduce", p, buf, hw), 0.0
-    n = microbatches if gradsync.stream else 1
     n_buckets = max(1, math.ceil(buf * hw.bytes_per_elem
                                  / max(gradsync.bucket_bytes, 1)))
     t_pass = (hw.alpha * (p - 1) * n_buckets
               + gather_or_scatter_volume(p, buf)
               * hw.bytes_per_elem / hw.link_bw)
+    if gradsync.zero3:
+        per_mb = 2 if gradsync.prefetch else 3
+        total = microbatches * per_mb * t_pass
+        hideable = 0.0
+        if gradsync.ring:
+            # all per-layer streams ride the scan except the leading
+            # param gather and the trailing gradient reduce-scatter
+            hideable = total - 2 * t_pass
+            if gradsync.cross_step:
+                hideable = total
+        return total, hideable
+    n = microbatches if gradsync.stream else 1
     total = (n + 1) * t_pass  # n RS passes + the AG rebroadcast
     hideable = (n - 1) * t_pass if (gradsync.ring and gradsync.stream
                                     and microbatches > 1) else 0.0
+    if gradsync.cross_step and gradsync.ring:
+        # cross-step window: the param/gradient all-gather hides under
+        # the next step's first-microbatch forward, the last RS pass
+        # under the optimizer math
+        hideable = hideable + 2 * t_pass
     return total, hideable
 
 
@@ -386,7 +426,10 @@ def predict_step_time(layers: Sequence[LayerShape], tokens: int,
     including the bucketed DP path of ``gradsync``, whose streamed
     microbatch reduce-scatters only become *hidden* when there is a
     later microbatch backward to ride under (``microbatches > 1`` with
-    ``stream``/``ring`` on; :func:`dp_sync_time`).
+    ``stream``/``ring`` on; :func:`dp_sync_time`), the ZeRO-3
+    param-shard streams (per-layer gather/RS rides the scan; only the
+    terminal passes stay exposed), and the ``cross_step`` window that
+    hides exactly those terminal passes across the step boundary.
     """
     out = ZERO_TIME
     for ls in layers:

@@ -29,6 +29,24 @@ This module replaces that with a subsystem built on the ring machinery of
     (``optim.adamw.apply_updates_sharded``) and a ring all-gather
     rebroadcasts the updated params — optimizer memory drops by
     ``G_data`` on top of the z-axis sharding the 4D layout already gives.
+  * **ZeRO-3 param-shard streaming**: with ``zero3`` on, the params are
+    never rebroadcast either — they live permanently as ``1/G_data``
+    shards (one stack-aware bucket per leaf, :func:`make_leaf_plan`, so
+    the layer scans of the models can slice per-layer shard rows) and
+    each layer's working copy is assembled just-in-time inside the layer
+    scan body by a ring all-gather over the data axis — the same
+    place/accumulate ``ppermute`` convention as the z-axis weight rings
+    of :mod:`repro.core.collective_matmul`, generalized to the data ring
+    (:class:`ParamStreamer`). The gather sits *inside* the rematerialized
+    scan body, so the working copy is released after each layer's
+    forward and re-gathered by remat for its backward; with ``prefetch``
+    the next layer's gathered copy rides the scan carry instead
+    (gathered one layer ahead — its ring hops overlap the current
+    layer's GEMMs — and retained as a saved carry for the backward, no
+    re-gather: FSDP's reshard_after_forward=False point). The backward's
+    gradient w.r.t. each shard is the *transpose* of the gather — a ring
+    reduce-scatter summed over data — so every microbatch's DP gradient
+    sync streams through the backward itself, per layer, for free.
 
 Per-element metadata that the blocking path read off the pytree (weight
 decay masks, which mesh axes a leaf's grad-norm contribution must be
@@ -71,7 +89,29 @@ class GradSyncConfig:
     state stays replicated). zero: additionally keep the gradients
     scattered and shard the AdamW state ZeRO-1-style over ``data``
     (implies the bucketed schedule; the all-gather moves updated *params*
-    instead of gradients). Both off (default) keeps the blocking path.
+    instead of gradients). zero3: additionally shard the *params* over
+    ``data`` (one stack-aware bucket per leaf, :func:`make_leaf_plan`)
+    and stream each layer's working copy just-in-time through the layer
+    scan (:class:`ParamStreamer`) — param memory drops by ``G_data`` on
+    top of the ZeRO-1 optimizer drop; the update's param rebroadcast
+    disappears (new shards come straight from the master shards). All
+    off (default) keeps the blocking path.
+
+    prefetch (zero3 only): gather layer ``i+1``'s shards during layer
+    ``i``'s compute via the scan carry and *retain* the gathered copy
+    for the backward (no re-gather; per-rank peak param memory returns
+    to ~full — the comm-vs-memory point of FSDP's
+    reshard_after_forward=False). Off (default): the gather lives inside
+    the rematerialized scan body, released after the layer and
+    re-gathered for its backward — peak param memory is the shards plus
+    one in-flight layer's working set.
+
+    cross_step: comm-model knob only (``comm_model.dp_sync_time``):
+    model the cross-step overlap window where the terminal collectives
+    of step t — the ZeRO-1 param all-gather / ZeRO-3 first-layer gather
+    and the last microbatch's reduce-scatter — hide under step t+1's
+    first-microbatch forward and the optimizer math respectively. Off
+    reproduces the fully-exposed terminal model exactly.
 
     bucket_mb: fp32 bucket size bound in MiB. Smaller buckets give the
     scheduler finer-grained ring/backward pairs to overlap but pay more
@@ -90,6 +130,9 @@ class GradSyncConfig:
 
     bucketed: bool = False
     zero: bool = False
+    zero3: bool = False
+    prefetch: bool = False
+    cross_step: bool = False
     bucket_mb: float = 4.0
     stream: bool = True
     ring: bool = True
@@ -97,10 +140,18 @@ class GradSyncConfig:
     def __post_init__(self):
         if self.bucket_mb <= 0:
             raise ValueError(f"bucket_mb must be > 0, got {self.bucket_mb}")
+        if self.prefetch and not self.zero3:
+            raise ValueError("prefetch is a zero3 knob (param-shard "
+                             "streaming retention); set zero3=True")
 
     @property
     def enabled(self) -> bool:
-        return self.bucketed or self.zero
+        return self.bucketed or self.zero or self.zero3
+
+    @property
+    def state_sharded(self) -> bool:
+        """AdamW state lives as 1/G_data shards (ZeRO-1 and up)."""
+        return self.zero or self.zero3
 
     @property
     def bucket_bytes(self) -> int:
@@ -134,14 +185,23 @@ class Segment:
 
 @dataclasses.dataclass(eq=False)
 class Bucket:
+    """``stack == 1`` buckets are flat ``(padded,)`` buffers (the PR-3
+    gradient plan). ``stack > 1`` buckets hold one *scan-stacked* leaf
+    (:func:`make_leaf_plan`): ``size``/``padded``/``gid`` and the
+    segment offsets describe ONE stack slot (one layer of the scan), the
+    flat buffer is ``(stack, padded)``, and every collective/shard slice
+    works on the last dim — so a layer scan can slice row ``i`` and
+    gather just that layer's shard."""
+
     segments: Tuple[Segment, ...]
-    size: int                 # unpadded elements
-    padded: int               # padded to a multiple of dp
+    size: int                 # unpadded elements (per stack slot)
+    padded: int               # padded to a multiple of dp (per slot)
     z_reduced: bool           # grads already reduce-scattered over z
     y_reduce: bool            # grads need a psum over y
     dtype: Any                # param dtype of every leaf in this bucket
     groups: Tuple[GroupMeta, ...]
     gid: np.ndarray           # (padded,) int8 group id per element
+    stack: int = 1            # leading scan dim (1 = unstacked)
 
 
 @dataclasses.dataclass(eq=False)
@@ -153,15 +213,16 @@ class BucketPlan:
 
     @property
     def shard_sizes(self) -> Tuple[int, ...]:
+        """Per-rank fp32 elements per bucket, per stack slot."""
         return tuple(b.padded // self.dp for b in self.buckets)
 
     @property
     def total_elements(self) -> int:
-        return sum(b.size for b in self.buckets)
+        return sum(b.size * b.stack for b in self.buckets)
 
     @property
     def padded_elements(self) -> int:
-        return sum(b.padded for b in self.buckets)
+        return sum(b.padded * b.stack for b in self.buckets)
 
 
 def _local_shape(shape, spec, axes: M.MeshAxes) -> Tuple[int, ...]:
@@ -255,13 +316,71 @@ def make_plan(structs, specs, axes: M.MeshAxes, bucket_bytes: int, *,
                       n_leaves=len(flat))
 
 
+def make_leaf_plan(structs, specs, axes: M.MeshAxes, *,
+                   no_decay: Optional[Callable] = None,
+                   stack_of: Optional[Callable] = None) -> BucketPlan:
+    """The ZeRO-3 param-shard layout: one bucket per leaf, in tree order
+    (``plan.buckets[i]`` <-> tree leaf ``i``), so a shard tree carries
+    the params' own pytree structure and the models' layer scans can
+    slice it unchanged.
+
+    ``stack_of(path, local_shape) -> int`` marks scan-stacked leaves
+    (leading layer dim; 1 / None = unstacked): a stacked leaf is sharded
+    *per stack slot* — shard shape ``(stack, padded // dp)`` — so slicing
+    row ``i`` yields exactly layer ``i``'s shard and the just-in-time
+    gather stays per-layer. Padding/metadata machinery is shared with
+    :func:`make_plan` (the gradient bucket plan); every downstream
+    consumer — sharded AdamW, grad norm, checkpoint gather/scatter —
+    works on either plan.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structs)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+    assert len(flat) == len(spec_leaves)
+    dp = max(axes.dp, 1)
+    done: List[Bucket] = []
+    for i, ((path, leaf), ps) in enumerate(zip(flat, spec_leaves)):
+        lshape = _local_shape(tuple(leaf.shape), tuple(ps.spec), axes)
+        stack = int(stack_of(path, lshape)) if stack_of else 1
+        if stack > 1:
+            assert lshape and lshape[0] == stack, (path, lshape, stack)
+            slot_shape = lshape[1:]
+        else:
+            stack, slot_shape = 1, lshape
+        size = int(np.prod(slot_shape)) if slot_shape else 1
+        padded = -(-size // dp) * dp
+        meta = GroupMeta(decay=(no_decay is None or not no_decay(path)),
+                         norm_names=_norm_names(tuple(ps.spec)))
+        done.append(Bucket(
+            segments=(Segment(leaf=i, offset=0, size=size,
+                              shape=slot_shape),),
+            size=size, padded=padded, z_reduced=bool(ps.z_reduced),
+            y_reduce=bool(ps.y_reduce), dtype=jnp.dtype(leaf.dtype),
+            groups=(meta,), gid=np.zeros((padded,), np.int8),
+            stack=stack))
+    return BucketPlan(buckets=tuple(done), treedef=treedef, dp=dp,
+                      n_leaves=len(flat))
+
+
 # ---------------------------------------------------------------------- #
 # flatten / unflatten (trace-time; local shards)
 # ---------------------------------------------------------------------- #
 
 def flatten_bucket(leaves: Sequence, bucket: Bucket, *,
                    dtype=jnp.float32):
-    """Concat the bucket's leaves (raveled, cast) + zero padding."""
+    """Concat the bucket's leaves (raveled, cast) + zero padding.
+
+    Unstacked buckets -> ``(padded,)``; stacked buckets -> ``(stack,
+    padded)`` (each slot raveled and padded independently, so a scan can
+    slice slot rows)."""
+    if bucket.stack > 1:
+        parts = [leaves[s.leaf].astype(dtype).reshape(bucket.stack, -1)
+                 for s in bucket.segments]
+        if bucket.padded > bucket.size:
+            parts.append(jnp.zeros(
+                (bucket.stack, bucket.padded - bucket.size), dtype))
+        return (jnp.concatenate(parts, axis=-1) if len(parts) > 1
+                else parts[0])
     parts = [leaves[s.leaf].astype(dtype).reshape(-1)
              for s in bucket.segments]
     if bucket.padded > bucket.size:
@@ -271,6 +390,11 @@ def flatten_bucket(leaves: Sequence, bucket: Bucket, *,
 
 def unflatten_bucket(flat, bucket: Bucket) -> List[Tuple[int, Any]]:
     """Full (padded) flat bucket -> [(leaf index, local-shaped array)]."""
+    if bucket.stack > 1:
+        return [(s.leaf,
+                 flat[..., s.offset:s.offset + s.size].reshape(
+                     (bucket.stack,) + s.shape))
+                for s in bucket.segments]
     return [(s.leaf, flat[s.offset:s.offset + s.size].reshape(s.shape))
             for s in bucket.segments]
 
@@ -284,9 +408,11 @@ def _shard_index(axes: M.MeshAxes):
 
 def shard_slice(full, plan: BucketPlan, bucket: Bucket, axes: M.MeshAxes):
     """Carve this rank's shard out of a full (padded) bucket-length
-    array; works on traced values and embedded constants alike."""
+    array (last dim — the per-slot dim of stacked buckets); works on
+    traced values and embedded constants alike."""
     ln = bucket.padded // plan.dp
-    return jax.lax.dynamic_slice(full, (_shard_index(axes) * ln,), (ln,))
+    return jax.lax.dynamic_slice_in_dim(full, _shard_index(axes) * ln, ln,
+                                        axis=-1)
 
 
 # ---------------------------------------------------------------------- #
@@ -302,9 +428,9 @@ def reduce_scatter_grads(grads, plan: BucketPlan, axes: M.MeshAxes, *,
     for b in plan.buckets:
         flat = flatten_bucket(leaves, b)
         if ring:
-            out.append(M.ring_reduce_scatter(flat, axes.data, dim=0))
+            out.append(M.ring_reduce_scatter(flat, axes.data, dim=-1))
         else:
-            out.append(M.psum_scatter(flat, axes.data, dim=0))
+            out.append(M.psum_scatter(flat, axes.data, dim=-1))
     return out
 
 
@@ -326,8 +452,8 @@ def tensor_reduce_shards(shards: Sequence, plan: BucketPlan,
 
 def _gather(flat_shard, axes: M.MeshAxes, ring: bool):
     if ring:
-        return M.ring_all_gather(flat_shard, axes.data, dim=0)
-    return M.all_gather(flat_shard, axes.data, dim=0)
+        return M.ring_all_gather(flat_shard, axes.data, dim=-1)
+    return M.all_gather(flat_shard, axes.data, dim=-1)
 
 
 def _gather_to_tree(shards: Sequence, plan: BucketPlan, axes: M.MeshAxes,
@@ -356,6 +482,140 @@ def rebuild_params(master_shards: Sequence, plan: BucketPlan,
     (Cast-then-gather halves the wire bytes vs gathering fp32; the cast
     is element-wise so the result is unchanged.)"""
     return _gather_to_tree(master_shards, plan, axes, ring=ring, cast=True)
+
+
+# ---------------------------------------------------------------------- #
+# ZeRO-3 param-shard streaming (leaf plans, make_leaf_plan)
+# ---------------------------------------------------------------------- #
+
+def shard_params(params, plan: BucketPlan, axes: M.MeshAxes):
+    """Full local params -> the permanent ZeRO-3 shard tree (same pytree
+    structure; each leaf is this rank's 1/G_data flat shard in the
+    leaf's own dtype — ``(stack, padded/dp)`` for scan-stacked leaves,
+    ``(padded/dp,)`` otherwise). shard_map body."""
+    leaves = jax.tree.leaves(params)
+    out = []
+    for b in plan.buckets:
+        flat = flatten_bucket(leaves, b, dtype=b.dtype)
+        out.append(shard_slice(flat, plan, b, axes))
+    return jax.tree.unflatten(plan.treedef, out)
+
+
+def gather_param_leaf(shard, bucket: Bucket, axes: M.MeshAxes, *,
+                      ring: bool = True):
+    """Assemble one leaf's working copy from its data-axis shard — the
+    just-in-time gather of the streaming schedule (ring ``ppermute``
+    chain, same send-right convention as the z-axis weight rings).
+
+    A 1-D shard is either an unstacked leaf or ONE scan-sliced slot row
+    of a stacked leaf (both reshape to the slot shape); a 2-D shard is a
+    whole stacked leaf (checkpoint/serve path). Differentiable: the
+    transpose is a ring reduce-scatter over ``data`` — the backward's DP
+    gradient sync falls out of autodiff."""
+    full = _gather(shard, axes, ring)
+    seg = bucket.segments[0]
+    if full.ndim == 2:
+        return full[:, :seg.size].reshape((bucket.stack,) + seg.shape)
+    return full[:seg.size].reshape(seg.shape)
+
+
+def unshard_params(shards, plan: BucketPlan, axes: M.MeshAxes, *,
+                   ring: bool = False):
+    """Shard tree -> full local params (the checkpoint/save path, and
+    the escape hatch back to the replicated layout)."""
+    leaves = jax.tree.leaves(shards)
+    out: List = [None] * plan.n_leaves
+    for b, s in zip(plan.buckets, leaves):
+        out[b.segments[0].leaf] = gather_param_leaf(s, b, axes, ring=ring)
+    return jax.tree.unflatten(plan.treedef, out)
+
+
+def shards_to_tree(masters: Sequence, plan: BucketPlan):
+    """Updated fp32 master shards (bucket order) -> the param shard tree
+    (cast to each leaf's dtype). The ZeRO-3 replacement for
+    :func:`rebuild_params`: no collective at all — the new params ARE
+    the shards."""
+    return jax.tree.unflatten(
+        plan.treedef, [s.astype(b.dtype)
+                       for b, s in zip(plan.buckets, masters)])
+
+
+def _flat_pspec(axes: M.MeshAxes, *, stacked: bool):
+    """PartitionSpec of a flat shard dim: distinct on every mesh rank
+    (scattered over data, tensor-sharded content over x/y/z) -> tiled
+    over ALL logical axes in mesh order; stacked leaves keep the scan
+    dim replicated."""
+    from jax.sharding import PartitionSpec as P
+    names = axes.all_names()
+    entry = (names if len(names) != 1 else names[0]) if names else None
+    return P(None, entry) if stacked else P(entry)
+
+
+def param_shard_pspecs(plan: BucketPlan, axes: M.MeshAxes):
+    """shard_map specs for the ZeRO-3 param shard tree."""
+    return jax.tree.unflatten(
+        plan.treedef,
+        [_flat_pspec(axes, stacked=b.stack > 1) for b in plan.buckets])
+
+
+def abstract_param_shards(plan: BucketPlan, axes: M.MeshAxes):
+    """GLOBAL-shaped ShapeDtypeStructs of the shard tree (dry-run)."""
+    g = axes.size(axes.all_names())
+    out = []
+    for b, ln in zip(plan.buckets, plan.shard_sizes):
+        shape = (b.stack, ln * g) if b.stack > 1 else (ln * g,)
+        out.append(jax.ShapeDtypeStruct(shape, b.dtype))
+    return jax.tree.unflatten(plan.treedef, out)
+
+
+@dataclasses.dataclass(eq=False)
+class ParamStreamer:
+    """The just-in-time assembly policy a zero3 train step hands to the
+    model: which leaves stream through the layer scan (stacked buckets)
+    vs. materialize once up front (everything else), how to gather, and
+    whether to prefetch.
+
+    ``buckets_like()`` mirrors the param tree with its Bucket leaves so
+    model code can walk shards and layout together; ``resident()``
+    gathers every unstacked leaf (embedding, head, final norm, ...) and
+    leaves the scan-stacked shards in place for the per-layer streams.
+    With ``prefetch`` the scan body gathers layer i+1's shards while
+    layer i computes and carries the working copy across iterations
+    (retained for backward); otherwise the gather sits inside the
+    rematerialized body — released after the layer, re-gathered by
+    remat in the backward."""
+
+    plan: BucketPlan
+    axes: M.MeshAxes
+    ring: bool = True
+    prefetch: bool = False
+
+    def buckets_like(self):
+        """Bucket tree with the params' own structure (Buckets are
+        opaque pytree leaves)."""
+        out: List = [None] * self.plan.n_leaves
+        for b in self.plan.buckets:
+            out[b.segments[0].leaf] = b
+        return jax.tree.unflatten(self.plan.treedef, out)
+
+    def gather(self, shard, bucket: Bucket):
+        return gather_param_leaf(shard, bucket, self.axes, ring=self.ring)
+
+    def gather_tree(self, shards, buckets):
+        """Gather a (sub)tree of shards against its bucket subtree —
+        one ring all-gather per leaf (the per-layer streaming window
+        when called on a scan-sliced block)."""
+        return jax.tree.map(lambda s, b: self.gather(s, b), shards,
+                            buckets)
+
+    def resident(self, params):
+        """Materialize every non-streamed (unstacked) leaf; stacked
+        shards pass through untouched for the layer scans."""
+        leaves = jax.tree.leaves(params)
+        out = []
+        for b, s in zip(self.plan.buckets, leaves):
+            out.append(s if b.stack > 1 else self.gather(s, b))
+        return jax.tree.unflatten(self.plan.treedef, out)
 
 
 # ---------------------------------------------------------------------- #
@@ -423,21 +683,23 @@ def init_sharded_state(params, plan: BucketPlan, axes: M.MeshAxes):
 def sharded_state_pspecs(plan: BucketPlan, axes: M.MeshAxes):
     """PartitionSpecs for the sharded state: each shard is distinct on
     every mesh rank (scattered over data, tensor-sharded content over
-    x/y/z), so dim 0 tiles over ALL logical axes in mesh order."""
+    x/y/z), so the flat dim tiles over ALL logical axes in mesh order
+    (stacked buckets keep their leading scan dim replicated)."""
     from jax.sharding import PartitionSpec as P
-    names = axes.all_names()
-    spec = P(names if len(names) != 1 else names[0]) if names else P(None)
-    return {"buckets": [{"m": spec, "v": spec, "master": spec}
-                        for _ in plan.buckets],
-            "step": P()}
+    buckets = []
+    for b in plan.buckets:
+        spec = _flat_pspec(axes, stacked=b.stack > 1)
+        buckets.append({"m": spec, "v": spec, "master": spec})
+    return {"buckets": buckets, "step": P()}
 
 
 def abstract_sharded_state(plan: BucketPlan, axes: M.MeshAxes):
     """GLOBAL-shaped ShapeDtypeStructs of the sharded state (dry-run)."""
     g = axes.size(axes.all_names())
     buckets = []
-    for ln in plan.shard_sizes:
-        st = jax.ShapeDtypeStruct((ln * g,), jnp.float32)
+    for b, ln in zip(plan.buckets, plan.shard_sizes):
+        shape = (b.stack, ln * g) if b.stack > 1 else (ln * g,)
+        st = jax.ShapeDtypeStruct(shape, jnp.float32)
         buckets.append({"m": st, "v": st, "master": st})
     return {"buckets": buckets,
             "step": jax.ShapeDtypeStruct((), jnp.int32)}
@@ -449,11 +711,12 @@ def gather_sharded_state(state, plan: BucketPlan, axes: M.MeshAxes):
     body; blocking gathers — this is the save path)."""
     per_leaf: List = [None] * plan.n_leaves
     for b, st in zip(plan.buckets, state["buckets"]):
-        fulls = {k: M.all_gather(st[k], axes.data, dim=0)
+        fulls = {k: M.all_gather(st[k], axes.data, dim=-1)
                  for k in ("m", "v", "master")}
         for s in b.segments:
+            shape = ((b.stack,) + s.shape) if b.stack > 1 else s.shape
             per_leaf[s.leaf] = {
-                k: fulls[k][s.offset:s.offset + s.size].reshape(s.shape)
+                k: fulls[k][..., s.offset:s.offset + s.size].reshape(shape)
                 for k in ("m", "v", "master")}
     return {"opt": jax.tree.unflatten(plan.treedef, per_leaf),
             "step": state["step"]}

@@ -169,6 +169,7 @@ def all_gather(v, axis: AxisName, *, dim: int, tiled: bool = True):
     n = _names(axis)
     if not n:
         return v
+    dim = dim % v.ndim  # lax collectives reject negative dims
     out = v
     for name in reversed(n):
         out = jax.lax.all_gather(out, name, axis=dim, tiled=tiled)
@@ -181,6 +182,7 @@ def psum_scatter(v, axis: AxisName, *, dim: int, tiled: bool = True):
     n = _names(axis)
     if not n:
         return v
+    dim = dim % v.ndim  # lax collectives reject negative dims
     out = v
     for name in n:
         out = jax.lax.psum_scatter(out, name, scatter_dimension=dim, tiled=tiled)

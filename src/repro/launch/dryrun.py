@@ -95,9 +95,11 @@ def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
                                 gradsync=gradsync)
         step, pspecs, spspecs = ST.make_train_step(
             cfg, mesh, axes, OPT.AdamWConfig(), topts)
-        params, _ = ST.init_model(cfg, axes, abstract=True)
+        # params in the layout the step expects (ZeRO-3 shard tree vs
+        # replicated-over-data)
+        pstructs, _ = ST.abstract_params(cfg, axes, topts)
         params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
-                              params, pspecs)
+                              pstructs, pspecs)
         # the state layout (ZeRO-sharded buckets vs per-leaf replicated)
         # follows the gradsync config
         state = ST.abstract_opt_state(cfg, axes, topts)
@@ -120,6 +122,29 @@ def _make_lowered(cfg, shape, mesh, axes, *, unroll: bool,
     params = jax.tree.map(lambda st, sp: _sharded_struct(mesh, st, sp),
                           params, pspecs)
     return fn.lower(params, ins["caches"], ins["tokens"], ins["pos"])
+
+
+def _tree_bytes_per_rank(mesh, structs, pspecs) -> int:
+    """Per-device persistent bytes of a (struct, PartitionSpec) tree —
+    the param/optimizer-state accounting the ZeRO modes move (replicated
+    vs ZeRO-1 vs ZeRO-3; EXPERIMENTS.md §Memory)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat_s = jax.tree.leaves(structs)
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    total = 0
+    for st, sp in zip(flat_s, flat_p):
+        div = 1
+        for entry in tuple(sp):
+            if entry is None:
+                continue
+            for nm in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= sizes.get(nm, 1)
+        n = 1
+        for d in st.shape:
+            n *= int(d)
+        total += (n // div) * jnp.dtype(st.dtype).itemsize
+    return int(total)
 
 
 def _raw_terms(compiled):
@@ -174,18 +199,27 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               overdecompose: int = 1, factors=None, probe: bool = True,
               remat_policy: str = "full", cache_gather: bool = False,
               overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1,
-              zero: bool = False, dp_bucket_mb: float = 4.0):
+              zero: bool = False, zero3: bool = False,
+              zero3_prefetch: bool = False, dp_bucket_mb: float = 4.0,
+              objective: str = "auto"):
     # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
     z_chunks = z_chunks if overlap else 1
     ar_chunks = ar_chunks if overlap else 1
-    dp_bucket_mb = dp_bucket_mb if zero else 0.0  # inert without --zero
+    zero = zero and not zero3          # zero3 supersedes the ZeRO-1 path
+    zero3_prefetch = zero3_prefetch if zero3 else False
+    dp_bucket_mb = dp_bucket_mb if (zero or zero3) else 0.0
     ov = (OverlapConfig.all_on(z_chunks=z_chunks, ar_chunks=ar_chunks,
                                cache_weight_gather=cache_gather)
           if overlap else OverlapConfig(cache_weight_gather=cache_gather))
-    gs = (GradSyncConfig(zero=True, bucket_mb=dp_bucket_mb)
-          if zero else GradSyncConfig())
+    if zero3:
+        gs = GradSyncConfig(zero3=True, prefetch=zero3_prefetch,
+                            bucket_mb=dp_bucket_mb)
+    elif zero:
+        gs = GradSyncConfig(zero=True, bucket_mb=dp_bucket_mb)
+    else:
+        gs = GradSyncConfig()
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     seqshard = shape.seqshard
@@ -199,7 +233,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         if factors is None:
             factors = choose_factors(cfg, shape,
                                      pods=2 if multi_pod else 1,
-                                     overlap=ov if overlap else None)
+                                     overlap=ov if overlap else None,
+                                     objective=objective)
         mesh = LM.make_production_mesh_4d(*factors, multi_pod=multi_pod)
         axes = LM.bind_4d(mesh)
     cfg.validate_axes(axes)
@@ -217,6 +252,18 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
     compiled = lowered.compile()
     compile_s = time.time() - t0
     mem = RL.memory_summary(compiled)
+    if shape.kind == "train":
+        # per-rank persistent param + optimizer bytes (what the ZeRO
+        # levels shrink: replicated -> /G_data opt -> /G_data params too)
+        topts = ST.TrainOptions(overdecompose=overdecompose,
+                                xent_chunks=xent_chunks,
+                                remat_policy=remat_policy, overlap=ov,
+                                gradsync=gs)
+        (pst, pps), (ost, ops) = ST.state_layouts(cfg, axes, topts)
+        mem["param_bytes_per_rank"] = _tree_bytes_per_rank(mesh, pst, pps)
+        mem["opt_bytes_per_rank"] = _tree_bytes_per_rank(mesh, ost, ops)
+        mem["param_opt_bytes_per_rank"] = (mem["param_bytes_per_rank"]
+                                           + mem["opt_bytes_per_rank"])
 
     # (2) depth probes (unrolled, exact HLO costs) -> linear extrapolation.
     # XLA's cost model counts a scan body once regardless of trip count, so
@@ -268,7 +315,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
         "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
-        "zero": zero, "dp_bucket_mb": dp_bucket_mb,
+        "zero": zero, "zero3": zero3, "zero3_prefetch": zero3_prefetch,
+        "dp_bucket_mb": dp_bucket_mb, "objective": objective,
         "compile_s": round(compile_s, 1), "probe_s": round(probe_s, 1),
         "memory": mem,
         "roofline": roof,
@@ -289,12 +337,18 @@ def _feasible(cfg, factors, multi_pod=False):
 
 
 def choose_factors(cfg, shape, pods: int = 1,
-                   overlap: OverlapConfig = None):
+                   overlap: OverlapConfig = None,
+                   objective: str = "auto"):
     """Communication-model-optimal (g_data, g_x, g_y, g_z) for this pair.
 
-    With ``overlap`` set, ranks by the α-β overlap-aware
-    ``predict_step_time`` (ring-hidden z traffic makes z-heavier factors
-    cheaper); otherwise by the paper's volume model.
+    ``objective='auto'`` (the default) ranks by the α-β overlap-aware
+    ``predict_step_time`` whenever ``overlap`` is set (ring-hidden z
+    traffic makes z-heavier factors cheaper) and by the paper's volume
+    model otherwise; ``'time'`` / ``'volume'`` force either — the
+    ``--objective volume`` escape hatch back to the pure Eq. 5
+    criterion. Validate a chosen ranking against measured step times
+    with ``benchmarks.run --only fig5_measured`` (it reports the
+    predicted-vs-measured best decomposition).
 
     long_500k (global_batch=1, cache seq-sharded over data) lifts the
     batch-divisibility constraint; decode shapes fix g_z=1 (the z axis is
@@ -324,8 +378,11 @@ def choose_factors(cfg, shape, pods: int = 1,
     # inference shapes have no gradient all-reduce: drop the data-parallel
     # term so the model maximizes dp (subject to the memory floor) instead
     # of being penalized for it (§Perf pair 2/3 iteration)
+    if objective == "auto":
+        objective = ("time" if overlap is not None and overlap.any_enabled
+                     else "volume")
     obj = {}
-    if overlap is not None and overlap.any_enabled:
+    if objective == "time":
         obj = dict(objective="time", overlap=overlap)
     ranked = CM.optimize_decomposition(
         list(cfg.comm_layers()), tokens, 256, cons, top_k=64,
@@ -374,9 +431,26 @@ def main():
                          "gradient reduce-scatter rings streamed through "
                          "the overdecompose loop + AdamW state sharded "
                          "over the data axis (core/gradsync.py)")
+    ap.add_argument("--zero3", action="store_true",
+                    help="ZeRO-3 param-shard streaming: params live as "
+                         "1/G_data shards, each layer's working copy is "
+                         "ring-all-gathered just-in-time inside the layer "
+                         "scan and released after use; AdamW state "
+                         "sharded as with --zero (core/gradsync.py)")
+    ap.add_argument("--zero3-prefetch", action="store_true",
+                    help="with --zero3: gather layer i+1's shards during "
+                         "layer i's compute and retain the working copy "
+                         "for the backward (no re-gather; param memory "
+                         "returns to ~full)")
     ap.add_argument("--dp-bucket-mb", type=float, default=4.0,
                     help="fp32 gradient bucket size bound in MiB "
-                         "(with --zero)")
+                         "(with --zero/--zero3)")
+    ap.add_argument("--objective", default="auto",
+                    choices=["auto", "time", "volume"],
+                    help="factor-chooser objective: auto = the α-β "
+                         "overlap-aware time model whenever --overlap is "
+                         "set, the paper's volume model otherwise; "
+                         "'volume' is the escape hatch back to Eq. 5")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip depth-probe lowerings (multi-pod pass: the "
                          "compile proof only, roofline terms from the "
@@ -391,7 +465,9 @@ def main():
     pods = [False, True] if args.both_pods else [args.multi_pod]
     z_chunks = args.z_chunks if args.overlap else 1  # inert without ring
     ar_chunks = args.ar_chunks if args.overlap else 1
-    dp_bucket_mb = args.dp_bucket_mb if args.zero else 0.0
+    zero = args.zero and not args.zero3
+    zero3_prefetch = args.zero3_prefetch if args.zero3 else False
+    dp_bucket_mb = args.dp_bucket_mb if (zero or args.zero3) else 0.0
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -406,7 +482,10 @@ def main():
                               r.get("z_chunks", 1),
                               r.get("ar_chunks", 1),
                               r.get("zero", False),
-                              r.get("dp_bucket_mb", 0.0)))
+                              r.get("zero3", False),
+                              r.get("zero3_prefetch", False),
+                              r.get("dp_bucket_mb", 0.0),
+                              r.get("objective", "auto")))
                 except Exception:
                     pass
 
@@ -420,20 +499,25 @@ def main():
                 for mp in pods:
                     key = (arch, shape, mk, mp, args.overdecompose,
                            args.overlap, z_chunks, ar_chunks,
-                           args.zero, dp_bucket_mb)
+                           zero, args.zero3, zero3_prefetch, dp_bucket_mb,
+                           args.objective)
                     if key in done:
                         print(f"cached {key}")
                         continue
                     print(f"=== {arch} {shape} {mk} multi_pod={mp} "
-                          f"overlap={args.overlap} zero={args.zero}",
+                          f"overlap={args.overlap} zero={zero} "
+                          f"zero3={args.zero3}",
                           flush=True)
                     try:
                         rec, compiled = lower_one(
                             arch, shape, mk, multi_pod=mp,
                             overdecompose=args.overdecompose,
                             overlap=args.overlap, z_chunks=z_chunks,
-                            ar_chunks=ar_chunks, zero=args.zero,
+                            ar_chunks=ar_chunks, zero=zero,
+                            zero3=args.zero3,
+                            zero3_prefetch=zero3_prefetch,
                             dp_bucket_mb=args.dp_bucket_mb,
+                            objective=args.objective,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -441,7 +525,9 @@ def main():
                               f"coll={r['collective_bytes']:.3e}B "
                               f"dom={r['dominant']}")
                         print("  memory:", rec["memory"].get(
-                            "total_per_device_bytes"))
+                            "total_per_device_bytes"),
+                              "param+opt/rank:", rec["memory"].get(
+                            "param_opt_bytes_per_rank"))
                     except Exception as e:
                         rec = {"arch": arch, "shape": shape, "mesh": mk,
                                "multi_pod": mp,
@@ -449,7 +535,9 @@ def main():
                                "overlap": args.overlap,
                                "z_chunks": z_chunks,
                                "ar_chunks": ar_chunks,
-                               "zero": args.zero,
+                               "zero": zero,
+                               "zero3": args.zero3,
+                               "zero3_prefetch": zero3_prefetch,
                                "dp_bucket_mb": dp_bucket_mb,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}

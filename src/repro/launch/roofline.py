@@ -141,22 +141,29 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
 
 
 def step_time_estimate(flops: float, bytes_by_kind: Dict[str, float], *,
-                       hw: Optional[CM.HardwareParams] = None
-                       ) -> CM.StepTime:
+                       hw: Optional[CM.HardwareParams] = None,
+                       cross_step: bool = False) -> CM.StepTime:
     """Overlap-aware step-time estimate from compiled-HLO roofline terms.
 
     The analytic twin is ``comm_model.predict_step_time`` (closed-form
     shapes); this one prices the *measured* per-device collective bytes:
-    collective-permute traffic (the ring-decomposed z weight collectives
-    and x/y activation all-reduces) hides under up to
-    ``overlap_efficiency`` of the compute time, blocking collectives are
-    fully exposed."""
+    collective-permute traffic (the ring-decomposed z weight collectives,
+    x/y activation all-reduces and DP gradient/param-shard rings) hides
+    under up to ``overlap_efficiency`` of the compute time, blocking
+    collectives are fully exposed. ``cross_step`` additionally treats
+    all-gather/reduce-scatter traffic as hideable — the cross-step
+    window of ``comm_model.dp_sync_time`` where a step's terminal
+    gathers ride under the next step's forward and the last
+    reduce-scatter under the optimizer math (the HLO byte map carries
+    no axis attribution, so this is the coarse-grained twin of that
+    per-axis model)."""
     hw = hw or CM.TPU_V5E
     compute_t = flops / hw.flops
-    hid_b = sum(v for k, v in bytes_by_kind.items()
-                if k in OVERLAPPABLE_COLLECTIVES)
-    exp_b = sum(v for k, v in bytes_by_kind.items()
-                if k not in OVERLAPPABLE_COLLECTIVES)
+    kinds = OVERLAPPABLE_COLLECTIVES
+    if cross_step:
+        kinds = kinds + ("all-gather", "reduce-scatter")
+    hid_b = sum(v for k, v in bytes_by_kind.items() if k in kinds)
+    exp_b = sum(v for k, v in bytes_by_kind.items() if k not in kinds)
     hid_t = hid_b / hw.link_bw
     hidden = min(hid_t, hw.overlap_efficiency * compute_t)
     exposed = exp_b / hw.link_bw + (hid_t - hidden)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.overlap import OverlapConfig
 from repro.core.partition import spec_tree_to_pspecs
 from repro.launch import mesh as LM
 from repro.launch import steps as ST
@@ -28,6 +29,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="2,2,2,1")
+    ap.add_argument("--overlap", action="store_true",
+                    help="ring-decomposed collective matmuls in the "
+                         "prefill/decode steps (core/overlap.py: "
+                         "overlapped z weight gathers + x/y activation "
+                         "all-reduce rings)")
+    ap.add_argument("--z-chunks", type=int, default=1)
+    ap.add_argument("--ar-chunks", type=int, default=1)
     args = ap.parse_args()
 
     mesh = LM.make_smoke_mesh(tuple(int(x) for x in args.mesh.split(",")),
@@ -43,9 +51,14 @@ def main():
     params = ST.device_put_tree(mesh, params, spec_tree_to_pspecs(specs))
 
     S_max = args.prompt_len + args.gen
-    pre_build, _ = ST.make_prefill_step(cfg, mesh, axes, dtype=dtype)
+    ov = (OverlapConfig.all_on(z_chunks=args.z_chunks,
+                               ar_chunks=args.ar_chunks)
+          if args.overlap else OverlapConfig())
+    pre_build, _ = ST.make_prefill_step(cfg, mesh, axes, dtype=dtype,
+                                        overlap=ov)
     pre_fn, bt, ct = pre_build(args.batch, args.prompt_len, S_max)
-    dec_build, _ = ST.make_decode_step(cfg, mesh, axes, dtype=dtype)
+    dec_build, _ = ST.make_decode_step(cfg, mesh, axes, dtype=dtype,
+                                       overlap=ov)
     dec_fn, _ = dec_build(args.batch, S_max)
 
     rng = np.random.RandomState(0)
@@ -59,6 +72,17 @@ def main():
     if cfg.arch_type == "audio":
         batch["frames"] = jnp.asarray(rng.randn(
             args.batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+
+    # warmup: run prefill + one decode step on throwaway caches so the
+    # timed numbers below exclude XLA compile time
+    warm = ST.zeros_caches(mesh, ct)
+    t0 = time.time()
+    wl, warm = pre_fn(params, warm, batch)
+    wt = jnp.argmax(wl[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    wl, warm = dec_fn(params, warm, wt, jnp.int32(args.prompt_len))
+    jax.block_until_ready(wl)
+    print(f"warmup (compile) in {time.time()-t0:.2f}s")
+    del warm
 
     caches = ST.zeros_caches(mesh, ct)
     t0 = time.time()

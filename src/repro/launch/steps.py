@@ -109,8 +109,10 @@ class TrainOptions:
     gradsync: GradSyncConfig = GradSyncConfig()
 
 
-def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions):
+def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions,
+             pstream=None):
     if cfg.arch_type == "audio":
+        assert pstream is None  # zero3 is gated to the decoder families
         def f(params, batch):
             return ED.encdec_loss(params, cfg, axes, batch["frames"],
                                   batch["tokens"], batch["labels"],
@@ -124,8 +126,24 @@ def _loss_fn(cfg: ArchConfig, axes: M.MeshAxes, opts: TrainOptions):
                          remat=opts.remat, xent_chunks=opts.xent_chunks,
                          unroll=opts.unroll_layers,
                          remat_policy=opts.remat_policy,
-                         mtp_weight=opts.mtp_weight)
+                         mtp_weight=opts.mtp_weight, pstream=pstream)
     return f
+
+
+def _stack_of(path, local_shape) -> int:
+    """Scan-stack detector for the ZeRO-3 leaf plan: every leaf under
+    the decoder's ``segments`` subtree is stacked ``(n_periods, ...)``
+    for the layer scan — its shard must keep that leading dim so the
+    scan can slice per-layer shard rows."""
+    keys = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+    if keys and keys[0] == "segments" and len(local_shape) > 0:
+        return int(local_shape[0])
+    return 1
+
+
+def _zero3_plan(structs, specs, axes: M.MeshAxes):
+    return GS.make_leaf_plan(structs, specs, axes,
+                             no_decay=OPT._no_decay, stack_of=_stack_of)
 
 
 def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
@@ -139,12 +157,26 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     pspecs = spec_tree_to_pspecs(specs)
     gs = opts.gradsync
-    plan = (GS.make_plan(structs, specs, axes, gs.bucket_bytes,
-                         no_decay=OPT._no_decay)
-            if gs.enabled else None)
-    spspecs = (GS.sharded_state_pspecs(plan, axes) if gs.zero
-               else OPT.state_pspecs(pspecs))
-    loss_fn = _loss_fn(cfg, axes, opts)
+    pstream = None
+    if gs.zero3:
+        if cfg.arch_type == "audio":
+            raise NotImplementedError(
+                "gradsync.zero3 (param-shard streaming) is wired for the "
+                "decoder families; audio encdec supports zero (ZeRO-1)")
+        # ZeRO-3: params live as 1/G_data shards (one stack-aware bucket
+        # per leaf); the step's params argument/output IS the shard tree
+        plan = _zero3_plan(structs, specs, axes)
+        pspecs = GS.param_shard_pspecs(plan, axes)
+        spspecs = GS.sharded_state_pspecs(plan, axes)
+        pstream = GS.ParamStreamer(plan=plan, axes=axes, ring=gs.ring,
+                                   prefetch=gs.prefetch)
+    else:
+        plan = (GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                             no_decay=OPT._no_decay)
+                if gs.enabled else None)
+        spspecs = (GS.sharded_state_pspecs(plan, axes) if gs.zero
+                   else OPT.state_pspecs(pspecs))
+    loss_fn = _loss_fn(cfg, axes, opts, pstream=pstream)
 
     def scalar_loss(params, batch):
         loss, metrics = loss_fn(params, batch)
@@ -153,7 +185,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     def step(params, opt_state, batch):
         vg = jax.value_and_grad(scalar_loss, has_aux=True)
         n = opts.overdecompose
-        stream = gs.enabled and gs.stream
+        stream = gs.enabled and not gs.zero3 and gs.stream
         shards = None
         if n > 1:
             mb = split_batch(batch, n, axes=axes)
@@ -175,6 +207,15 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
                                                  ring=gs.ring)
                     shards = (si if shards is None
                               else [a + b for a, b in zip(shards, si)])
+                elif gs.zero3:
+                    # zero3: gi is already in the shard layout — each
+                    # leaf's gradient came out of the gather's transpose
+                    # as a ring reduce-scatter over data, streamed per
+                    # layer through this microbatch's own backward
+                    si = [g.astype(jnp.float32)
+                          for g in jax.tree.leaves(gi)]
+                    shards = (si if shards is None
+                              else [a + b for a, b in zip(shards, si)])
                 else:
                     # accumulate in fp32: bf16 running sums lose ~1 ulp
                     # per add, which compounds as overdecompose grows
@@ -185,14 +226,25 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
                             grads, gi))
             loss = loss / n
             metrics = jax.tree.map(lambda v: v / n, metrics)
-            if stream:
+            if shards is not None:
                 shards = [s / n for s in shards]
             else:
                 grads = jax.tree.map(lambda g: g / n, grads)
         else:
             (loss, metrics), grads = vg(params, batch)
 
-        if gs.enabled:
+        if gs.zero3:
+            if shards is None:
+                shards = [g.astype(jnp.float32)
+                          for g in jax.tree.leaves(grads)]
+            shards = GS.tensor_reduce_shards(shards, plan, axes)
+            # the new params ARE the cast master shards (rebuild=False):
+            # no param rebroadcast — next step's per-layer gathers
+            # re-assemble working copies just in time
+            params, opt_state, om = OPT.apply_updates_sharded(
+                shards, opt_state, plan, axes, opt_cfg, ring=gs.ring,
+                rebuild=False)
+        elif gs.enabled:
             # bucketed data-parallel sync (core/gradsync.py): scattered
             # fp32 shards + whole-bucket y/z reductions in place of the
             # per-leaf blocking psums
@@ -248,6 +300,9 @@ def abstract_opt_state(cfg: ArchConfig, axes: M.MeshAxes,
     axes = axes.with_overlap(opts.overlap)
     structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     gs = opts.gradsync
+    if gs.zero3:
+        return GS.abstract_sharded_state(_zero3_plan(structs, specs, axes),
+                                         axes)
     if gs.zero:
         plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
                             no_decay=OPT._no_decay)
@@ -255,21 +310,72 @@ def abstract_opt_state(cfg: ArchConfig, axes: M.MeshAxes,
     return OPT.init_state(structs, abstract=True)
 
 
+def abstract_params(cfg: ArchConfig, axes: M.MeshAxes,
+                    opts: TrainOptions = TrainOptions()):
+    """(GLOBAL-shaped param structs, PartitionSpecs) in the layout the
+    train step of ``opts`` expects: the ZeRO-3 shard tree under
+    ``gradsync.zero3``, the replicated-over-data layout otherwise (the
+    dry-run pairs this with ``make_train_step``'s param pspecs)."""
+    axes = axes.with_overlap(opts.overlap)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    if opts.gradsync.zero3:
+        plan = _zero3_plan(structs, specs, axes)
+        return GS.abstract_param_shards(plan, axes), \
+            GS.param_shard_pspecs(plan, axes)
+    return structs, spec_tree_to_pspecs(specs)
+
+
+def state_layouts(cfg: ArchConfig, axes: M.MeshAxes,
+                  opts: TrainOptions = TrainOptions()):
+    """((param structs, pspecs), (opt-state structs, pspecs)) of the
+    train step of ``opts`` — the persistent per-rank state the ZeRO
+    levels shrink; the dry-run prices it per rank for the replicated vs
+    ZeRO-1 vs ZeRO-3 memory accounting. One abstract init + one plan
+    serves all four trees."""
+    axes = axes.with_overlap(opts.overlap)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    gs = opts.gradsync
+    if gs.zero3:
+        plan = _zero3_plan(structs, specs, axes)
+        return ((GS.abstract_param_shards(plan, axes),
+                 GS.param_shard_pspecs(plan, axes)),
+                (GS.abstract_sharded_state(plan, axes),
+                 GS.sharded_state_pspecs(plan, axes)))
+    if gs.zero:
+        plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                            no_decay=OPT._no_decay)
+        return ((structs, pspecs),
+                (GS.abstract_sharded_state(plan, axes),
+                 GS.sharded_state_pspecs(plan, axes)))
+    return ((structs, pspecs),
+            (OPT.init_state(structs, abstract=True),
+             OPT.state_pspecs(pspecs)))
+
+
 @dataclasses.dataclass(frozen=True)
 class GradSyncTools:
     """Jitted companions of a ZeRO-sharded train step.
 
-    ``init(params)`` builds the scattered fp32 state;
-    ``gather(state)`` / ``scatter(full_state)`` convert to/from the
-    replicated per-leaf layout (the checkpoint format — ckpt.py
-    save_sharded/restore_sharded); ``plan`` / ``state_pspecs`` are the
-    bucket layout and shard_map specs the step was built with."""
+    ``init(params)`` builds the scattered fp32 state from full
+    (replicated-over-data) params; ``gather(state)`` /
+    ``scatter(full_state)`` convert to/from the replicated per-leaf
+    layout (the checkpoint format — ckpt.py save_sharded/
+    restore_sharded); ``plan`` / ``state_pspecs`` are the bucket layout
+    and shard_map specs the step was built with. Under ``zero3`` the
+    params themselves are sharded too: ``shard_params(full)`` /
+    ``unshard_params(shards)`` convert the param tree to/from the shard
+    layout (checkpoints stay replicated so g_data can change across
+    resume), and ``param_pspecs`` are the shard tree's specs."""
 
     plan: Any
     state_pspecs: Any
     init: Callable
     gather: Callable
     scatter: Callable
+    param_pspecs: Any = None
+    shard_params: Optional[Callable] = None
+    unshard_params: Optional[Callable] = None
 
 
 def make_gradsync_tools(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
@@ -281,8 +387,11 @@ def make_gradsync_tools(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     pspecs = spec_tree_to_pspecs(specs)
     gs = opts.gradsync
-    plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
-                        no_decay=OPT._no_decay)
+    if gs.zero3:
+        plan = _zero3_plan(structs, specs, axes)
+    else:
+        plan = GS.make_plan(structs, specs, axes, gs.bucket_bytes,
+                            no_decay=OPT._no_decay)
     sspecs = GS.sharded_state_pspecs(plan, axes)
     fullspecs = OPT.state_pspecs(pspecs)
     init = shard_map(lambda p: GS.init_sharded_state(p, plan, axes),
@@ -294,9 +403,21 @@ def make_gradsync_tools(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     scatter = shard_map(lambda s: GS.scatter_full_state(s, plan, axes),
                         mesh=mesh, in_specs=(fullspecs,), out_specs=sspecs,
                         check_vma=False)
+    extra = {}
+    if gs.zero3:
+        ppspecs = GS.param_shard_pspecs(plan, axes)
+        shard_p = shard_map(lambda p: GS.shard_params(p, plan, axes),
+                            mesh=mesh, in_specs=(pspecs,),
+                            out_specs=ppspecs, check_vma=False)
+        unshard_p = shard_map(
+            lambda s: GS.unshard_params(s, plan, axes), mesh=mesh,
+            in_specs=(ppspecs,), out_specs=pspecs, check_vma=False)
+        extra = dict(param_pspecs=ppspecs,
+                     shard_params=jax.jit(shard_p),
+                     unshard_params=jax.jit(unshard_p))
     return GradSyncTools(plan=plan, state_pspecs=sspecs,
                          init=jax.jit(init), gather=jax.jit(gather),
-                         scatter=jax.jit(scatter))
+                         scatter=jax.jit(scatter), **extra)
 
 
 # ---------------------------------------------------------------------- #

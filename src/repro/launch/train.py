@@ -70,8 +70,20 @@ def main():
                          "reduce-scatter rings streamed through the "
                          "overdecompose loop, AdamW state sharded over "
                          "the data axis (core/gradsync.py)")
+    ap.add_argument("--zero3", action="store_true",
+                    help="ZeRO-3 param-shard streaming: params live as "
+                         "1/G_data shards, each layer's working copy "
+                         "ring-all-gathered just-in-time inside the "
+                         "layer scan (core/gradsync.py); implies the "
+                         "--zero state sharding")
+    ap.add_argument("--zero3-prefetch", action="store_true",
+                    help="with --zero3: gather layer i+1's shards during "
+                         "layer i's compute; the copy is retained for "
+                         "the backward (no re-gather, ~full param "
+                         "memory)")
     ap.add_argument("--dp-bucket-mb", type=float, default=4.0,
-                    help="fp32 gradient bucket bound in MiB (with --zero)")
+                    help="fp32 gradient bucket bound in MiB "
+                         "(with --zero/--zero3)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--ckpt", default="")
@@ -93,13 +105,22 @@ def main():
 
     pspecs = spec_tree_to_pspecs(specs)
     params = ST.device_put_tree(mesh, params, pspecs)
-    gs = (GradSyncConfig(zero=True, bucket_mb=args.dp_bucket_mb)
-          if args.zero else GradSyncConfig())
+    if args.zero3:
+        gs = GradSyncConfig(zero3=True, prefetch=args.zero3_prefetch,
+                            bucket_mb=args.dp_bucket_mb)
+    elif args.zero:
+        gs = GradSyncConfig(zero=True, bucket_mb=args.dp_bucket_mb)
+    else:
+        gs = GradSyncConfig()
     topts = ST.TrainOptions(overdecompose=args.overdecompose, dtype=dtype,
                             gradsync=gs)
-    tools = ST.make_gradsync_tools(cfg, mesh, axes, topts) if gs.zero \
-        else None
-    state = tools.init(params) if gs.zero else init_state(params)
+    tools = (ST.make_gradsync_tools(cfg, mesh, axes, topts)
+             if gs.state_sharded else None)
+    state = tools.init(params) if gs.state_sharded else init_state(params)
+    if gs.zero3:
+        # the step's params argument IS the 1/G_data shard tree from
+        # here on; working copies are streamed per layer inside the step
+        params = tools.shard_params(params)
     opt = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
                       total_steps=args.steps)
     step_fn, _, _ = ST.make_train_step(cfg, mesh, axes, opt, topts)
@@ -130,12 +151,16 @@ def main():
             assert np.isfinite(loss), "NaN loss"
 
     if args.ckpt:
-        if gs.zero:
-            # sharded opt state travels in the replicated (per-leaf)
-            # layout so the run can resume under a different g_data
-            ckpt.save_sharded(args.ckpt, jax.tree.map(np.asarray, params),
+        if gs.state_sharded:
+            # sharded opt state (and, under zero3, the param shards)
+            # travels in the replicated per-leaf layout so the run can
+            # resume under a different g_data
+            full_p = (tools.unshard_params(params) if gs.zero3
+                      else params)
+            ckpt.save_sharded(args.ckpt, jax.tree.map(np.asarray, full_p),
                               state, tools.gather, step=step, pspecs=pspecs,
-                              extra={"dp_bucket_mb": args.dp_bucket_mb})
+                              extra={"dp_bucket_mb": args.dp_bucket_mb,
+                                     "zero3": gs.zero3})
         else:
             ckpt.save(args.ckpt, jax.tree.map(np.asarray, params),
                       step=step, pspecs=pspecs)

@@ -207,8 +207,21 @@ def _checkpoint(fn, policy: str):
 def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
                    positions=None, mode: str = "train", caches=None,
                    image_embeds=None, remat: bool = True,
-                   unroll: bool = False, remat_policy: str = "full"):
-    """Run embedding + all blocks. Returns (h, new_caches, aux_loss)."""
+                   unroll: bool = False, remat_policy: str = "full",
+                   pstream=None):
+    """Run embedding + all blocks. Returns (h, new_caches, aux_loss).
+
+    ``pstream`` (a ``gradsync.ParamStreamer``, zero3 training only)
+    switches the segment params to the ZeRO-3 shard layout: each scan
+    iteration assembles just its layer's working copy by a ring
+    all-gather over the data axis — inside the rematerialized body
+    (released after the layer, re-gathered by remat for the backward)
+    or, with ``pstream.prefetch``, one layer ahead via the carry (its
+    ring hops overlap the current layer's compute; the copy is retained
+    for the backward). Non-segment leaves must already be materialized
+    (``pstream.resident`` — ``lm_loss`` does this)."""
+    assert pstream is None or (mode == "train" and caches is None), \
+        "zero3 param streaming is a training-path feature"
     B, T = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
@@ -239,21 +252,54 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
 
     aux = aux0
     new_caches = {} if caches is not None else None
+    sbuckets = (pstream.buckets_like()["segments"]
+                if pstream is not None else None)
+    prefetch = pstream is not None and pstream.prefetch
     for s, (kinds, n_periods) in enumerate(cfg.segments()):
         seg_params = params["segments"][f"seg{s}"]
         seg_caches = None if caches is None else caches[f"seg{s}"]
+        seg_bk = None if sbuckets is None else sbuckets[f"seg{s}"]
+        # a segment streams only when its leaves are scan-stacked
+        # (stack > 1). n_periods == 1 segments plan as unstacked —
+        # ``pstream.resident`` already materialized their single layer
+        # (= one layer's working set, the floor the schedule holds
+        # anyway), so they run the plain non-streamed path below.
+        streamed = (seg_bk is not None
+                    and any(b.stack > 1 for b in jax.tree.leaves(seg_bk)))
+        pre = streamed and prefetch
         period_fn = make_period_fn(kinds)
         if unroll:
             # python-unrolled layers: exact HLO flop/collective accounting
             # for the dry-run (XLA cost analysis counts a scan body once)
             ncs = [] if caches is not None else None
+
+            def blk_fn(h, aux, blk, bc, _pf=period_fn, _bk=seg_bk,
+                       _stream=streamed and not prefetch):
+                # the just-in-time gather lives INSIDE the rematerialized
+                # block: released after the layer's forward, re-gathered
+                # by remat for its backward
+                if _stream:
+                    blk = pstream.gather_tree(blk, _bk)
+                return _pf(h, aux, blk, bc)
+            fn = blk_fn
+            if remat and mode == "train":
+                fn = _checkpoint(blk_fn, remat_policy)
+            nxt = (pstream.gather_tree(
+                jax.tree.map(lambda x: x[0], seg_params), seg_bk)
+                if pre else None)
             for i in range(n_periods):
-                blk = jax.tree.map(lambda x: x[i], seg_params)
+                if pre:
+                    # issue layer i+1's gathers before layer i's compute:
+                    # data-independent, so the scheduler overlaps them;
+                    # the gathered copy is a block input -> retained for
+                    # the backward (no re-gather)
+                    blk, nxt = nxt, (pstream.gather_tree(
+                        jax.tree.map(lambda x: x[i + 1], seg_params),
+                        seg_bk) if i + 1 < n_periods else None)
+                else:
+                    blk = jax.tree.map(lambda x: x[i], seg_params)
                 bc = (jax.tree.map(lambda x: x[i], seg_caches)
                       if caches is not None else None)
-                fn = period_fn
-                if remat and mode == "train":
-                    fn = _checkpoint(period_fn, remat_policy)
                 h, aux, nc = fn(h, aux, blk, bc)
                 if caches is not None:
                     ncs.append(nc)
@@ -261,12 +307,41 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
                 new_caches[f"seg{s}"] = jax.tree.map(
                     lambda *xs: jnp.stack(xs), *ncs)
         elif caches is None:
-            def body(h_aux, blk_params, _pf=period_fn):
-                h, aux, _ = _pf(*h_aux, blk_params, None)
-                return (h, aux), 0
-            if remat and mode == "train":
-                body = _checkpoint(body, remat_policy)
-            (h, aux), _ = jax.lax.scan(body, (h, aux), seg_params)
+            if pre:
+                # gathered layer i+1 rides the carry while layer i
+                # computes (retained as a saved carry for the backward);
+                # the scan runs layers 0..n-2 over layer 1..n-1's shards
+                # and the LAST layer applies outside it, so no gather is
+                # ever issued for a layer that does not run
+                first = pstream.gather_tree(
+                    jax.tree.map(lambda x: x[0], seg_params), seg_bk)
+                rest = jax.tree.map(lambda x: x[1:], seg_params)
+
+                def body(carry, nxt_shards, _pf=period_fn, _bk=seg_bk):
+                    h, aux, blk = carry
+                    nxt = pstream.gather_tree(nxt_shards, _bk)
+                    h, aux, _ = _pf(h, aux, blk, None)
+                    return (h, aux, nxt), 0
+
+                def last_fn(h, aux, blk, _pf=period_fn):
+                    h, aux, _ = _pf(h, aux, blk, None)
+                    return h, aux
+                if remat and mode == "train":
+                    body = _checkpoint(body, remat_policy)
+                    last_fn = _checkpoint(last_fn, remat_policy)
+                (h, aux, last), _ = jax.lax.scan(body, (h, aux, first),
+                                                 rest)
+                h, aux = last_fn(h, aux, last)
+            else:
+                def body(h_aux, blk_params, _pf=period_fn, _bk=seg_bk,
+                         _stream=streamed):
+                    if _stream:
+                        blk_params = pstream.gather_tree(blk_params, _bk)
+                    h, aux, _ = _pf(*h_aux, blk_params, None)
+                    return (h, aux), 0
+                if remat and mode == "train":
+                    body = _checkpoint(body, remat_policy)
+                (h, aux), _ = jax.lax.scan(body, (h, aux), seg_params)
         else:
             def body(h_aux, xs, _pf=period_fn):
                 blk_params, blk_caches = xs
@@ -290,12 +365,21 @@ def lm_logits(params, cfg: ArchConfig, axes: M.MeshAxes, h):
 def lm_loss(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, labels, *,
             image_embeds=None, remat: bool = True,
             xent_chunks: int = 1, unroll: bool = False,
-            remat_policy: str = "full", mtp_weight: float = 0.0):
+            remat_policy: str = "full", mtp_weight: float = 0.0,
+            pstream=None):
     """Mean cross-entropy over the *global* batch (+ MoE aux loss,
-    + optional DeepSeek-style MTP loss when configured and weighted)."""
+    + optional DeepSeek-style MTP loss when configured and weighted).
+
+    With ``pstream`` (zero3) ``params`` arrive as the ZeRO-3 shard tree:
+    the non-streamed leaves (embedding, head, norms, mtp, projector) are
+    materialized once here, the segment leaves stay sharded and stream
+    per-layer through ``decoder_hidden``."""
+    if pstream is not None:
+        params = pstream.resident(params)
     h, _, aux = decoder_hidden(params, cfg, axes, tokens, mode="train",
                                image_embeds=image_embeds, remat=remat,
-                               unroll=unroll, remat_policy=remat_policy)
+                               unroll=unroll, remat_policy=remat_policy,
+                               pstream=pstream)
     B, T = labels.shape
 
     def chunk_loss(hc, lc):

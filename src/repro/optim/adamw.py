@@ -149,18 +149,22 @@ def apply_updates(params, grads, state, specs, axes: M.MeshAxes,
 
 
 def apply_updates_sharded(shards, state, plan, axes: M.MeshAxes,
-                          cfg: AdamWConfig, *, ring: bool = True):
-    """One ZeRO-1 AdamW step on data-axis-scattered gradient shards.
+                          cfg: AdamWConfig, *, ring: bool = True,
+                          rebuild: bool = True):
+    """One ZeRO-1/3 AdamW step on data-axis-scattered gradient shards.
 
     ``shards`` are the per-bucket fp32 gradients (already reduced over
     data/z/y, scaled by 1/microbatches); ``state`` holds m/v/master only
     for this rank's shard of each bucket (``gradsync.init_sharded_state``).
     Element-wise math is identical to :func:`apply_updates`; weight decay
     uses the plan's per-element group-id masks in place of the per-leaf
-    path check. Returns (new_params, new_state, metrics); the new params
-    are rebuilt wholesale from the updated master shards by the ring
-    all-gather (the old params are not read — their buffers stay
-    donatable)."""
+    path check. Returns (new_params, new_state, metrics); with
+    ``rebuild`` the new params are rebuilt wholesale from the updated
+    master shards by the ring all-gather (ZeRO-1 — the old params are
+    not read, their buffers stay donatable); without it (ZeRO-3,
+    ``gradsync.zero3``) the new params ARE the cast master shards
+    (``gradsync.shards_to_tree``) — no collective at all, the per-layer
+    streaming gathers re-assemble working copies next step."""
     step = state["step"]
     lr = lr_at(cfg, step)
     gnorm = GS.sharded_grad_norm(shards, plan, axes)
@@ -183,6 +187,7 @@ def apply_updates_sharded(shards, state, plan, axes: M.MeshAxes,
         masters.append(master)
         new_buckets.append({"m": m, "v": v, "master": master})
 
-    params = GS.rebuild_params(masters, plan, axes, ring=ring)
+    params = (GS.rebuild_params(masters, plan, axes, ring=ring)
+              if rebuild else GS.shards_to_tree(masters, plan))
     return params, {"buckets": new_buckets, "step": step + 1}, \
         {"grad_norm": gnorm, "lr": lr}
