@@ -1,0 +1,99 @@
+"""Hardware calibration harness: measure, fit, persist, validate.
+
+Times the real collective/GEMM primitives on the live backend
+(``repro.core.calibrate``), least-squares-fits α/β per mesh-axis class
+plus the GEMM rate and the overlap/cross-step efficiencies, and persists
+a ``CalibrationProfile`` JSON that every ``--calib <path|auto>`` CLI flag
+(dryrun / train / hillclimb / benchmarks.run) loads back into the
+analytic model's ``HardwareParams``.
+
+  # full sweep, saved to runs/calib/<backend>.json:
+  PYTHONPATH=src python -m benchmarks.calibrate
+
+  # CI smoke (fewer sizes/reps):
+  PYTHONPATH=src python -m benchmarks.calibrate --quick
+
+  # fit + measured validation grid (predicted-vs-measured rank
+  # correlation over the fig5 decomposition grid):
+  PYTHONPATH=src python -m benchmarks.calibrate --validate
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.calibrate",
+        description="Measure collective α/β, GEMM rate and overlap "
+                    "efficiencies on the live backend; fit and persist a "
+                    "CalibrationProfile for the --calib flags.")
+    ap.add_argument("--out", default="",
+                    help="profile path (default runs/calib/<backend>.json)")
+    ap.add_argument("--mesh", default="",
+                    help="g_data,g_x,g_y,g_z over host devices "
+                         "(default: auto-factor the device count)")
+    ap.add_argument("--sizes", default="4096,16384,65536,262144",
+                    help="message-size sweep in buffer elements")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timing repetitions per point (min is kept)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: first 3 sizes, fewer reps")
+    ap.add_argument("--no-samples", action="store_true",
+                    help="omit the raw timing samples from the JSON")
+    ap.add_argument("--validate", action="store_true",
+                    help="after fitting, run the measured fig5 "
+                         "decomposition grid and report the predicted-"
+                         "vs-measured step-time rank correlation")
+    ap.add_argument("--steps", type=int, default=6,
+                    help="train steps per timing round in --validate")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    import dataclasses
+
+    from repro.core import calibrate as CB
+    from repro.launch import mesh as LM
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.split(","))
+        mesh = LM.make_smoke_mesh(shape, ("data", "x", "y", "z"))
+    sizes = tuple(int(v) for v in args.sizes.split(","))
+    prof = CB.run_calibration(mesh=mesh, sizes=sizes, reps=args.reps,
+                              quick=args.quick)
+    if args.no_samples:
+        prof = dataclasses.replace(prof, samples=())
+    out = args.out or CB.default_path(prof.backend)
+    prof.save(out)
+
+    print(f"backend={prof.backend} devices={prof.n_devices} "
+          f"mesh={prof.mesh_shape}")
+    print(f"alpha={prof.alpha:.3e} s/hop  gamma={prof.gamma:.3e} s/call  "
+          f"link_bw={prof.link_bw:.3e} B/s  "
+          f"flops={prof.flops:.3e} FLOP/s  (fit r2={prof.fit_r2:.3f})")
+    for f in prof.axis_fits:
+        print(f"  axis {f.axis} (p={f.p}): alpha={f.alpha:.3e} "
+              f"gamma={f.gamma:.3e} bw={f.link_bw:.3e} r2={f.r2:.3f} "
+              f"n={f.n_samples}")
+    print(f"overlap_efficiency={prof.overlap_efficiency:.3f} "
+          f"z_claims_first={prof.z_claims_first} "
+          f"cross_step_efficiency={prof.cross_step_efficiency:.3f}")
+    for k, v in sorted(prof.probes.items()):
+        print(f"  probe {k}={v:.6g}")
+    print("saved", out)
+
+    if args.validate:
+        from benchmarks import measured
+        print("name,us_per_call,derived")
+        for label, val, derived in measured.fig5_measured(
+                steps=args.steps, calib=out):
+            print(f"{label},{val:.2f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

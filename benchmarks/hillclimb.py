@@ -22,11 +22,11 @@ import json
 import os
 
 
-def run_variant(arch, shape, variant, out, probe=True):
+def run_variant(arch, shape, variant, out, probe=True, calib=""):
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=512")
     from repro.launch import dryrun as DR
-    kw = dict(probe=probe)
+    kw = dict(probe=probe, calib=calib)
     mesh = "tensor4d"
     if variant == "paper1d":
         mesh = "baseline-1d"
@@ -82,19 +82,31 @@ def run_variant(arch, shape, variant, out, probe=True):
     return rec
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.hillclimb",
+        description="Dry-run named perf variants of an (arch x shape) "
+                    "pair and log before/after roofline records.")
     ap.add_argument("--pair", required=True, help="arch:shape")
     ap.add_argument("--variant", action="append", required=True)
     ap.add_argument("--out", default="runs/perf/hillclimb.jsonl")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip the depth-probe lowerings (CI smoke: the "
                          "compile proof + memory accounting only)")
-    args = ap.parse_args()
+    ap.add_argument("--calib", default="",
+                    help="hardware calibration profile (path or 'auto'; "
+                         "benchmarks.calibrate) pricing each variant's "
+                         "factor chooser and step-time estimate")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     arch, shape = args.pair.split(":")
     for v in args.variant:
         try:
-            run_variant(arch, shape, v, args.out, probe=not args.no_probe)
+            run_variant(arch, shape, v, args.out, probe=not args.no_probe,
+                        calib=args.calib)
         except Exception as e:
             print(f"{arch} {shape} {v}: FAILED {type(e).__name__}: {e}",
                   flush=True)

@@ -41,10 +41,22 @@ def roofline_summary():
     return rows or [("roofline/empty", 0.0, "no records")]
 
 
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Benchmark harness: one function per paper "
+                    "table/figure + the roofline summary (CSV output).")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite subset (default: all)")
+    ap.add_argument("--calib", default="",
+                    help="hardware calibration profile (path or 'auto'; "
+                         "benchmarks.calibrate) pricing fig5_measured's "
+                         "predicted ranking / rank correlation")
+    return ap
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
+    args = build_parser().parse_args()
 
     from benchmarks import measured, paper_tables
     suites = {
@@ -53,7 +65,8 @@ def main() -> None:
         "fig8": paper_tables.fig8_weak_scaling,
         "table5": paper_tables.table5_cai3d,
         "eq12": paper_tables.eq11_asymptote,
-        "fig5_measured": measured.fig5_measured,
+        "fig5_measured": lambda: measured.fig5_measured(
+            calib=args.calib or None),
         "fig6": measured.fig6_validation,
         "overdecomp": measured.overdecomposition_overlap,
         "overlap": measured.overlap_collectives,

@@ -37,6 +37,23 @@ Tuple (multi-name) mesh axes ring once over the flattened group — the
 same FIRST-name-major linearization as a PartitionSpec tuple and
 core/mesh's blocking helpers, so layouts stay interchangeable; ``p == 1``
 degrades to the plain local GEMM with zero collectives.
+
+Knob units and degeneracy guarantees (DESIGN.md §Overlapped schedule;
+pinned by tests/test_overlap.py):
+
+  * ``chunks`` — **sub-rings per per-rank block** (dimensionless;
+    ``effective_chunks`` rounds down to the largest divisor of the block
+    width, so any value is safe). ``chunks=1`` is one ring whose hops
+    already interleave one GEMM each.
+  * Every ring driver moves exactly the wire bytes of its blocking
+    collective — the rings change *exposure*, never volume
+    (``comm_model.layer_volume`` is ring-agnostic for this reason).
+  * The forward place-ring is bitwise identical to AG-then-GEMM; the
+    accumulate/reduce-scatter/all-reduce rings are bitwise on
+    exactly-summable values and within fp32 reassociation otherwise.
+  * In the α-β model a ring costs ``(p-1)·α`` (AG/RS) or ``2(p-1)·α``
+    (AR) plus bandwidth-optimal bytes; measured α/β replacements come
+    from core/calibrate.py.
 """
 from __future__ import annotations
 

@@ -21,11 +21,27 @@ hops, gathers/scatters at p-1) and — when an
 :class:`~repro.core.overlap.OverlapConfig` enables the ring-decomposed
 collective matmuls — hides the z-axis weight traffic (``matmul``) and
 then the x/y activation all-reduce traffic (``all_reduce``) under the
-layer's own GEMM time, charging only the *exposed* remainder. With α = 0
-and overlap disabled the exposed-communication term reduces exactly to
-``model_volume * bytes_per_elem / bw``, so the volume model is the
-degenerate point of the time model (the shared :func:`layer_geometry`
-keeps the two in lockstep).
+layer's own GEMM time, charging only the *exposed* remainder.
+
+Units: volumes in *elements sent+received per device per iteration*;
+times in seconds; α in seconds/hop; ``link_bw`` in bytes/s; ``flops``
+in FLOP/s; ``bytes_per_elem`` in wire bytes per element; the
+``overlap_efficiency`` / ``cross_step_efficiency`` knobs are fractions
+in [0, 1].
+
+Degeneracy guarantees (pinned by tests/test_overlap.py,
+tests/test_gradsync.py, tests/test_zero3.py and tests/test_calibrate.py):
+
+  * α = 0 (γ is 0 by default) and overlap disabled ⇒ the
+    exposed-communication term equals ``model_volume * bytes_per_elem /
+    bw`` exactly — the volume model is the degenerate point of the time
+    model (the shared :func:`layer_geometry` keeps the two in lockstep);
+  * ``GradSyncConfig.cross_step = False`` ⇒ :func:`dp_sync_time` is
+    exactly the PR-3 exposed model;
+  * the :class:`HardwareParams` defaults (``z_claims_first=True``,
+    ``cross_step_efficiency=1.0``) ⇒ the pre-calibration model bitwise —
+    an uncalibrated run is unchanged. ``core/calibrate.py`` fits
+    measured replacements (``--calib`` on the CLIs).
 """
 from __future__ import annotations
 
@@ -235,19 +251,39 @@ def paper_optimal_gc(g_tensor: int) -> float:
 class HardwareParams:
     """Link/compute constants for the step-time predictor.
 
-    ``alpha`` is the per-ring-hop launch latency, ``link_bw`` the
-    per-device injection bandwidth, ``flops`` the achievable matmul rate.
-    ``overlap_efficiency`` is the fraction of a layer's GEMM time the
+    Units — ``alpha``: seconds per ring hop (link latency);
+    ``gamma``: seconds per collective *call* (launch/dispatch overhead,
+    LogGP's ``o``; hop-count-independent — on CPU backends it dominates
+    α, on ring interconnects α dominates); ``link_bw``: bytes/s of
+    per-device injection bandwidth; ``flops``: FLOP/s achievable matmul
+    rate; ``bytes_per_elem``: wire bytes per model element (2.0 = bf16);
+    ``overlap_efficiency``: the fraction of a layer's GEMM time the
     scheduler can actually use to hide ring traffic (1.0 = perfect
-    latency hiding; real schedulers lose some to chunk-boundary bubbles).
-    Defaults are TPU v5e (launch/roofline.py uses the same constants).
+    latency hiding; real schedulers lose some to chunk-boundary
+    bubbles).
+
+    ``z_claims_first`` orders the overlap-window claims in
+    :func:`layer_time`: True (default, the PR-2 assumption) lets the
+    z-axis weight rings hide before the x/y activation all-reduce
+    rings; False swaps the order. ``cross_step_efficiency`` scales the
+    cross-step window of :func:`dp_sync_time` (1.0 = the terminal
+    collectives hide fully, the PR-4 model).
+
+    Defaults are *guessed* TPU v5e constants (launch/roofline.py uses
+    the same ones); ``core/calibrate.py`` fits measured replacements
+    from the live backend and the ``--calib`` CLI flags load them. The
+    defaults are the uncalibrated degenerate point: every new field's
+    default reproduces the pre-calibration model bitwise.
     """
 
     alpha: float = 1e-6
+    gamma: float = 0.0
     link_bw: float = 50e9
     flops: float = 197e12
     bytes_per_elem: float = 2.0
     overlap_efficiency: float = 0.8
+    z_claims_first: bool = True
+    cross_step_efficiency: float = 1.0
 
 
 TPU_V5E = HardwareParams()
@@ -261,7 +297,7 @@ def collective_time(kind: str, p: int, buf: float,
     full gathered buffer for ``all_gather``/``reduce_scatter`` — the same
     conventions as the volume functions above, which supply the byte
     term; the α term charges one hop per ring step (AR = 2(p-1) steps,
-    AG/RS = p-1)."""
+    AG/RS = p-1), the γ term one launch per collective call."""
     if p <= 1:
         return 0.0
     if kind == "all_reduce":
@@ -270,7 +306,8 @@ def collective_time(kind: str, p: int, buf: float,
         vol, steps = gather_or_scatter_volume(p, buf), p - 1
     else:
         raise ValueError(f"unknown collective kind {kind!r}")
-    return hw.alpha * steps + vol * hw.bytes_per_elem / hw.link_bw
+    return (hw.gamma + hw.alpha * steps
+            + vol * hw.bytes_per_elem / hw.link_bw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -336,7 +373,7 @@ def dp_sync_time(p: int, buf: float,
         return collective_time("all_reduce", p, buf, hw), 0.0
     n_buckets = max(1, math.ceil(buf * hw.bytes_per_elem
                                  / max(gradsync.bucket_bytes, 1)))
-    t_pass = (hw.alpha * (p - 1) * n_buckets
+    t_pass = ((hw.gamma + hw.alpha * (p - 1)) * n_buckets
               + gather_or_scatter_volume(p, buf)
               * hw.bytes_per_elem / hw.link_bw)
     if gradsync.zero3:
@@ -348,7 +385,10 @@ def dp_sync_time(p: int, buf: float,
             # param gather and the trailing gradient reduce-scatter
             hideable = total - 2 * t_pass
             if gradsync.cross_step:
-                hideable = total
+                # spelled so efficiency 1.0 gives `total` bitwise (the
+                # pre-calibration model) and 0.0 the cross_step=False one
+                hideable = total - ((1.0 - hw.cross_step_efficiency)
+                                    * 2 * t_pass)
         return total, hideable
     n = microbatches if gradsync.stream else 1
     total = (n + 1) * t_pass  # n RS passes + the AG rebroadcast
@@ -357,8 +397,9 @@ def dp_sync_time(p: int, buf: float,
     if gradsync.cross_step and gradsync.ring:
         # cross-step window: the param/gradient all-gather hides under
         # the next step's first-microbatch forward, the last RS pass
-        # under the optimizer math
-        hideable = hideable + 2 * t_pass
+        # under the optimizer math — scaled by the *measured* fraction
+        # of that window (calibrate.cross_step_probe; 1.0 uncalibrated)
+        hideable = hideable + hw.cross_step_efficiency * 2 * t_pass
     return total, hideable
 
 
@@ -375,9 +416,11 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     (Eqs. 2-3 buffers); with ``overlap.all_reduce`` their ring
     decomposition hides under whatever part of the
     ``overlap_efficiency``-scaled compute window the z weight rings
-    (``overlap.matmul``) left over — the z collectives hide first, since
-    their rings pipeline against the very GEMM that consumes/produces the
-    weight. With ``gradsync`` streaming (core/gradsync.py) the DP
+    (``overlap.matmul``) left over — the z collectives hide first by
+    default, since their rings pipeline against the very GEMM that
+    consumes/produces the weight (``hw.z_claims_first=False``, set when
+    ``calibrate.overlap_probe`` measures the opposite, swaps the claim
+    order). With ``gradsync`` streaming (core/gradsync.py) the DP
     reduce-scatter rings claim whatever window is left after z and the
     activation ARs (:func:`dp_sync_time`: the last microbatch's RS and
     the param all-gather stay exposed). Blocking mode keeps every
@@ -398,12 +441,18 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
         t_dp, dp_hideable = dp_sync_time(d.g_data, g.dp_buf, gradsync,
                                          microbatches, hw)
     window = hw.overlap_efficiency * t_compute
-    hidden_z = (min(t_z, window)
-                if overlap is not None and overlap.matmul and d.g_z > 1
-                else 0.0)
-    hidden_ar = (min(t_act, window - hidden_z)
-                 if overlap is not None and overlap.all_reduce
-                 else 0.0)
+    want_z = overlap is not None and overlap.matmul and d.g_z > 1
+    want_ar = overlap is not None and overlap.all_reduce
+    # window claim order: z weight rings first by default (they pipeline
+    # against the very GEMM that consumes/produces the weight);
+    # hw.z_claims_first=False swaps it — calibrate.overlap_probe measures
+    # which ring actually hides better on the live backend
+    if hw.z_claims_first:
+        hidden_z = min(t_z, window) if want_z else 0.0
+        hidden_ar = min(t_act, window - hidden_z) if want_ar else 0.0
+    else:
+        hidden_ar = min(t_act, window) if want_ar else 0.0
+        hidden_z = min(t_z, window - hidden_ar) if want_z else 0.0
     hidden_dp = min(dp_hideable, max(window - hidden_z - hidden_ar, 0.0))
     hidden = hidden_z + hidden_ar + hidden_dp
     exposed = t_act + t_z + t_dp - hidden

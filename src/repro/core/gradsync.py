@@ -60,6 +60,24 @@ Every ring schedule here is a pure decomposition of the blocking one
 (DESIGN.md §Data-parallel sync schedule): same operands reduced to the
 same places, bitwise on exactly-summable values, and bitwise-identical to
 the blocking ``psum`` at ``G_data = 2`` (two-term fp addition commutes).
+
+Knob units and degeneracy guarantees (DESIGN.md §Data-parallel sync /
+§ZeRO-3 streaming; pinned by tests/test_gradsync.py, tests/test_zero3.py):
+
+  * ``bucket_mb`` — fp32 bucket bound in **MiB** (the α-latency grain of
+    ``comm_model.dp_sync_time``: smaller buckets = finer overlap, more
+    ring launches).
+  * ``GradSyncConfig()`` (all off) ⇒ the per-leaf blocking ``psum`` path
+    of launch/steps.py, bit for bit.
+  * ``stream=False`` or one microbatch ⇒ RS + AG volume == the blocking
+    all-reduce volume exactly (Patarasuk-Yuan).
+  * ``cross_step=False`` ⇒ ``comm_model.dp_sync_time`` is exactly the
+    PR-3 exposed model; with it on, the hidden fraction of the terminal
+    passes scales with the *measured* ``HardwareParams.
+    cross_step_efficiency`` (core/calibrate.py; 1.0 uncalibrated = the
+    PR-4 model).
+  * ``zero3`` with ``prefetch`` at one microbatch ⇒ AG + RS == the
+    all-reduce volume (ZeRO-3's volume floor is the blocking one).
 """
 from __future__ import annotations
 

@@ -26,6 +26,21 @@ args and jit static args unchanged.
 weight from the forward pass instead of re-gathering in the backward pass
 (trades one AG_z per layer for holding the full (k_local, n_local) weight
 across the residual).
+
+Knob units and degeneracy guarantees (DESIGN.md §Overlapped schedule):
+
+  * ``z_chunks`` / ``ar_chunks`` — sub-rings per block (dimensionless
+    counts; non-dividing values round down to the largest divisor).
+  * ``OverlapConfig()`` (all off) ⇒ the blocking collective schedule of
+    core/parallel.py, bit for bit — and in ``comm_model.layer_time`` an
+    all-off config with ``alpha = 0`` reduces the exposed-communication
+    term exactly to the volume model.
+  * The ring knobs never change wire volume, only exposure; only
+    ``cache_weight_gather`` changes volume (drops one AG_z per layer),
+    and ``comm_model.layer_volume(overlap=...)`` models exactly that.
+  * How much ring traffic actually hides is the *measured*
+    ``HardwareParams.overlap_efficiency`` (core/calibrate.py's overlap
+    probe; 0.8 is the uncalibrated guess).
 """
 from __future__ import annotations
 

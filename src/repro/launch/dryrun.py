@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED, SHAPES, get_config, skip_reason
+from repro.core import calibrate as CB
 from repro.core.gradsync import GradSyncConfig
 from repro.core.overlap import OverlapConfig
 from repro.core.partition import spec_tree_to_pspecs
@@ -201,7 +202,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1,
               zero: bool = False, zero3: bool = False,
               zero3_prefetch: bool = False, dp_bucket_mb: float = 4.0,
-              objective: str = "auto"):
+              objective: str = "auto", calib: str = ""):
     # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
@@ -223,6 +224,9 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     seqshard = shape.seqshard
+    # measured hardware constants (core/calibrate.py) — the TPU_V5E
+    # guesses when uncalibrated, so calib="" changes nothing
+    hw = CB.resolve_hw(calib or None)
 
     if mesh_kind == "baseline-1d":
         mesh = LM.make_production_mesh(multi_pod=multi_pod)
@@ -234,7 +238,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
             factors = choose_factors(cfg, shape,
                                      pods=2 if multi_pod else 1,
                                      overlap=ov if overlap else None,
-                                     objective=objective)
+                                     objective=objective, hw=hw)
         mesh = LM.make_production_mesh_4d(*factors, multi_pod=multi_pod)
         axes = LM.bind_4d(mesh)
     cfg.validate_axes(axes)
@@ -285,16 +289,17 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         probe_s = 0.0
 
     coll_total = sum(terms["coll"].values())
-    ct = terms["flops"] / RL.PEAK_FLOPS
+    ct = terms["flops"] / hw.flops
     mt = terms["hbm"] / RL.HBM_BW
-    lt = coll_total / RL.ICI_BW
+    lt = coll_total / hw.link_bw
     dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
               key=lambda x: x[1])[0]
     mf = RL.model_flops_per_device(cfg, shape, n_dev)
     # overlap-aware step-time estimate: collective-permute traffic (the
     # ring-decomposed z collectives) hides under compute, the rest is
-    # exposed (launch/roofline.step_time_estimate)
-    est = RL.step_time_estimate(terms["flops"], terms["coll"])
+    # exposed (launch/roofline.step_time_estimate); priced with the
+    # calibrated constants when --calib gave any
+    est = RL.step_time_estimate(terms["flops"], terms["coll"], hw=hw)
     roof = {
         "flops": terms["flops"], "hbm_bytes": terms["hbm"],
         "collective_bytes": coll_total,
@@ -317,6 +322,7 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
         "zero": zero, "zero3": zero3, "zero3_prefetch": zero3_prefetch,
         "dp_bucket_mb": dp_bucket_mb, "objective": objective,
+        "calib": calib or "",
         "compile_s": round(compile_s, 1), "probe_s": round(probe_s, 1),
         "memory": mem,
         "roofline": roof,
@@ -338,7 +344,7 @@ def _feasible(cfg, factors, multi_pod=False):
 
 def choose_factors(cfg, shape, pods: int = 1,
                    overlap: OverlapConfig = None,
-                   objective: str = "auto"):
+                   objective: str = "auto", hw=None):
     """Communication-model-optimal (g_data, g_x, g_y, g_z) for this pair.
 
     ``objective='auto'`` (the default) ranks by the α-β overlap-aware
@@ -346,9 +352,11 @@ def choose_factors(cfg, shape, pods: int = 1,
     traffic makes z-heavier factors cheaper) and by the paper's volume
     model otherwise; ``'time'`` / ``'volume'`` force either — the
     ``--objective volume`` escape hatch back to the pure Eq. 5
-    criterion. Validate a chosen ranking against measured step times
-    with ``benchmarks.run --only fig5_measured`` (it reports the
-    predicted-vs-measured best decomposition).
+    criterion. ``hw`` (a ``--calib``-loaded ``HardwareParams``) prices
+    the time objective with measured constants. Validate a chosen
+    ranking against measured step times with ``benchmarks.run --only
+    fig5_measured`` (it reports the predicted-vs-measured best
+    decomposition AND the rank correlation over the whole grid).
 
     long_500k (global_batch=1, cache seq-sharded over data) lifts the
     batch-divisibility constraint; decode shapes fix g_z=1 (the z axis is
@@ -383,7 +391,7 @@ def choose_factors(cfg, shape, pods: int = 1,
                      else "volume")
     obj = {}
     if objective == "time":
-        obj = dict(objective="time", overlap=overlap)
+        obj = dict(objective="time", overlap=overlap, hw=hw)
     ranked = CM.optimize_decomposition(
         list(cfg.comm_layers()), tokens, 256, cons, top_k=64,
         include_data_parallel=(shape.kind == "train"), **obj)
@@ -407,22 +415,35 @@ def _min_tensor(cfg, shape) -> int:
     return min(t, 256)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.dryrun",
+        description="Lower + compile every (arch x shape x mesh) against "
+                    "the production meshes and extract roofline terms.")
+    ap.add_argument("--arch", default=None,
+                    help="one assigned architecture (default: all when "
+                         "--all)")
+    ap.add_argument("--shape", default=None,
+                    help="one input shape from configs.SHAPES")
     ap.add_argument("--mesh", default="both",
-                    choices=["baseline-1d", "tensor4d", "both"])
-    ap.add_argument("--multi-pod", action="store_true")
+                    choices=["baseline-1d", "tensor4d", "both"],
+                    help="production mesh kind")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="add the leading 2-pod axis (512 devices)")
     ap.add_argument("--both-pods", action="store_true",
                     help="run single-pod AND multi-pod")
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--overdecompose", type=int, default=1)
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) combo")
+    ap.add_argument("--overdecompose", type=int, default=1,
+                    help="microbatch count of the overdecompose loop "
+                         "(paper §4.2)")
     ap.add_argument("--overlap", action="store_true",
                     help="ring-decomposed collective matmuls: overlapped "
                          "z-axis weight collectives AND x/y activation "
                          "all-reduce rings")
-    ap.add_argument("--z-chunks", type=int, default=1)
+    ap.add_argument("--z-chunks", type=int, default=1,
+                    help="sub-rings per z-axis weight block "
+                         "(with --overlap)")
     ap.add_argument("--ar-chunks", type=int, default=1,
                     help="sub-rings per scattered block of the x/y "
                          "activation all-reduces (with --overlap)")
@@ -451,12 +472,23 @@ def main():
                          "overlap-aware time model whenever --overlap is "
                          "set, the paper's volume model otherwise; "
                          "'volume' is the escape hatch back to Eq. 5")
+    ap.add_argument("--calib", default="",
+                    help="hardware calibration profile: a JSON path from "
+                         "benchmarks.calibrate, or 'auto' for "
+                         "runs/calib/<backend>.json; prices the factor "
+                         "chooser and roofline with measured α/β/flops "
+                         "instead of the TPU_V5E guesses")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip depth-probe lowerings (multi-pod pass: the "
                          "compile proof only, roofline terms from the "
                          "scanned program)")
-    ap.add_argument("--out", default="runs/dryrun/results.jsonl")
-    args = ap.parse_args()
+    ap.add_argument("--out", default="runs/dryrun/results.jsonl",
+                    help="JSONL record sink (also the resume cache)")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]
     shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
@@ -485,7 +517,8 @@ def main():
                               r.get("zero3", False),
                               r.get("zero3_prefetch", False),
                               r.get("dp_bucket_mb", 0.0),
-                              r.get("objective", "auto")))
+                              r.get("objective", "auto"),
+                              r.get("calib", "")))
                 except Exception:
                     pass
 
@@ -500,7 +533,7 @@ def main():
                     key = (arch, shape, mk, mp, args.overdecompose,
                            args.overlap, z_chunks, ar_chunks,
                            zero, args.zero3, zero3_prefetch, dp_bucket_mb,
-                           args.objective)
+                           args.objective, args.calib)
                     if key in done:
                         print(f"cached {key}")
                         continue
@@ -517,7 +550,7 @@ def main():
                             zero3=args.zero3,
                             zero3_prefetch=zero3_prefetch,
                             dp_bucket_mb=args.dp_bucket_mb,
-                            objective=args.objective,
+                            objective=args.objective, calib=args.calib,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -539,6 +572,7 @@ def main():
                                "zero3": args.zero3,
                                "zero3_prefetch": zero3_prefetch,
                                "dp_bucket_mb": dp_bucket_mb,
+                               "calib": args.calib,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

@@ -23,9 +23,11 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import comm_model as CM
 
-# single source of truth for the chip constants is comm_model.TPU_V5E
-# (ROADMAP: calibrate HardwareParams against real-TPU timings; deriving
-# here keeps the analytic model and the HLO roofline in lockstep)
+# single source of truth for the DEFAULT chip constants is
+# comm_model.TPU_V5E (deriving here keeps the analytic model and the HLO
+# roofline in lockstep); measured replacements come from
+# core/calibrate.py profiles — pass their hardware_params() as ``hw`` to
+# analyze()/step_time_estimate() (the dryrun --calib flag does)
 PEAK_FLOPS = CM.TPU_V5E.flops
 HBM_BW = 819e9
 ICI_BW = CM.TPU_V5E.link_bw
@@ -204,17 +206,19 @@ def model_flops_per_device(cfg, shape, n_devices: int) -> float:
     return total / n_devices
 
 
-def analyze(compiled, cfg, shape, n_devices: int) -> Roofline:
+def analyze(compiled, cfg, shape, n_devices: int,
+            hw: Optional[CM.HardwareParams] = None) -> Roofline:
+    hw = hw or CM.TPU_V5E
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     stats = parse_collectives(compiled.as_text())
-    ct = flops / PEAK_FLOPS
+    ct = flops / hw.flops
     mt = hbm / HBM_BW
-    lt = stats.total_bytes / ICI_BW
-    est = step_time_estimate(flops, stats.bytes_by_kind)
+    lt = stats.total_bytes / hw.link_bw
+    est = step_time_estimate(flops, stats.bytes_by_kind, hw=hw)
     dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
               key=lambda kv: kv[1])[0]
     mf = model_flops_per_device(cfg, shape, n_devices)

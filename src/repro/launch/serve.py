@@ -21,22 +21,38 @@ from repro.launch import mesh as LM
 from repro.launch import steps as ST
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mesh", default="2,2,2,1")
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Batched serving: prefill a batch of prompts, then "
+                    "decode, on the current host devices.")
+    ap.add_argument("--arch", required=True,
+                    help="architecture name (repro.configs)")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"],
+                    help="model-size preset")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="concurrent sequences")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="prefill length (tokens)")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="decode steps after prefill")
+    ap.add_argument("--mesh", default="2,2,2,1",
+                    help="g_data,g_x,g_y,g_z over host devices")
     ap.add_argument("--overlap", action="store_true",
                     help="ring-decomposed collective matmuls in the "
                          "prefill/decode steps (core/overlap.py: "
                          "overlapped z weight gathers + x/y activation "
                          "all-reduce rings)")
-    ap.add_argument("--z-chunks", type=int, default=1)
-    ap.add_argument("--ar-chunks", type=int, default=1)
-    args = ap.parse_args()
+    ap.add_argument("--z-chunks", type=int, default=1,
+                    help="sub-rings per z weight block (with --overlap)")
+    ap.add_argument("--ar-chunks", type=int, default=1,
+                    help="sub-rings per activation all-reduce block "
+                         "(with --overlap)")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     mesh = LM.make_smoke_mesh(tuple(int(x) for x in args.mesh.split(",")),
                               ("data", "x", "y", "z"))

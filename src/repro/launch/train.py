@@ -53,18 +53,28 @@ def preset_config(cfg, preset: str):
     raise ValueError(preset)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.train",
+        description="End-to-end training on the current host devices "
+                    "(CPU smoke scale or a real TPU slice).")
+    ap.add_argument("--arch", required=True,
+                    help="architecture name (repro.configs)")
     ap.add_argument("--preset", default="smoke",
-                    choices=["smoke", "100m", "full"])
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
+                    choices=["smoke", "100m", "full"],
+                    help="model-size preset for CPU-scale runs")
+    ap.add_argument("--steps", type=int, default=100,
+                    help="optimizer steps")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch (sequences)")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length (tokens)")
+    ap.add_argument("--lr", type=float, default=3e-4,
+                    help="peak AdamW learning rate")
     ap.add_argument("--mesh", default="2,2,2,1",
                     help="g_data,g_x,g_y,g_z over host devices")
-    ap.add_argument("--overdecompose", type=int, default=2)
+    ap.add_argument("--overdecompose", type=int, default=2,
+                    help="microbatch count of the overdecompose loop")
     ap.add_argument("--zero", action="store_true",
                     help="ZeRO-sharded DP sync: bucketed gradient "
                          "reduce-scatter rings streamed through the "
@@ -85,11 +95,31 @@ def main():
                     help="fp32 gradient bucket bound in MiB "
                          "(with --zero/--zero3)")
     ap.add_argument("--dtype", default="float32",
-                    choices=["float32", "bfloat16"])
-    ap.add_argument("--ckpt", default="")
-    ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--log-file", default="")
-    args = ap.parse_args()
+                    choices=["float32", "bfloat16"],
+                    help="activation/param compute dtype")
+    ap.add_argument("--calib", default="",
+                    help="hardware calibration profile (path or 'auto'; "
+                         "benchmarks.calibrate): report the α-β model's "
+                         "predicted step time next to the measured one "
+                         "at the end of the run")
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint directory to save at the end")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="steps between metric log lines")
+    ap.add_argument("--log-file", default="",
+                    help="JSON metrics sink")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+
+    # resolve the calibration profile up front: a bad --calib path must
+    # fail before the training loop, not after it
+    calib_hw = None
+    if args.calib:
+        from repro.core import calibrate as CB
+        calib_hw = CB.resolve_hw(args.calib)
 
     shape = tuple(int(x) for x in args.mesh.split(","))
     mesh = LM.make_smoke_mesh(shape, ("data", "x", "y", "z"))
@@ -130,6 +160,7 @@ def main():
                                     global_batch=args.batch))
     log = []
     t0 = time.time()
+    t_warm = None  # set after step 0 (compile excluded from step timing)
     for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in
                  make_batch(cfg, step, data,
@@ -139,6 +170,9 @@ def main():
             batch = {k: (v.astype(jnp.bfloat16) if v.dtype == jnp.float32
                          else v) for k, v in batch.items()}
         params, state, metrics = step_fn(params, state, batch)
+        if step == 0:
+            jax.block_until_ready(metrics["loss"])
+            t_warm = time.time()
         if step % args.log_every == 0 or step == args.steps - 1:
             loss = float(metrics["loss"])
             gn = float(metrics["grad_norm"])
@@ -149,6 +183,8 @@ def main():
             log.append({"step": step, "loss": loss, "grad_norm": gn,
                         "tok_s": tok_s})
             assert np.isfinite(loss), "NaN loss"
+    jax.block_until_ready(params)
+    t_end = time.time()  # before the checkpoint write pollutes the clock
 
     if args.ckpt:
         if gs.state_sharded:
@@ -165,6 +201,21 @@ def main():
             ckpt.save(args.ckpt, jax.tree.map(np.asarray, params),
                       step=step, pspecs=pspecs)
         print("saved", args.ckpt)
+    if args.calib and args.steps > 1:
+        # predicted-vs-measured validation line: the α-β model priced
+        # with the --calib profile against this run's wall clock
+        from repro.core import comm_model as CM
+        measured_s = (t_end - t_warm) / (args.steps - 1)
+        hw = dataclasses.replace(
+            calib_hw, bytes_per_elem=float(jnp.dtype(dtype).itemsize))
+        pred = CM.predict_step_time(
+            list(cfg.comm_layers()), args.batch * args.seq,
+            CM.Decomposition(*shape), hw, gradsync=gs,
+            microbatches=args.overdecompose)
+        print(f"calib[{args.calib}]: predicted step "
+              f"{pred.total * 1e3:.2f} ms (compute {pred.compute * 1e3:.2f}"
+              f" + exposed {pred.exposed_comm * 1e3:.2f}), measured "
+              f"{measured_s * 1e3:.2f} ms/step")
     if args.log_file:
         os.makedirs(os.path.dirname(args.log_file) or ".", exist_ok=True)
         with open(args.log_file, "w") as f:

@@ -1,0 +1,314 @@
+"""Hardware calibration (core/calibrate.py): fit recovery, profile
+round-trips, the --calib plumbing into the analytic model, and the
+uncalibrated-run degeneracies."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate as CB
+from repro.core import comm_model as CM
+
+from conftest import N_DEVICES
+
+
+# --------------------------------------------------------------------- #
+# fit: synthetic recovery and conventions
+# --------------------------------------------------------------------- #
+
+def _synthetic_samples(gamma, alpha, beta, axis="x", ps=(2, 4),
+                       sizes=(1 << 10, 1 << 14, 1 << 18)):
+    out = []
+    for p in ps:
+        for kind in ("all_gather", "reduce_scatter", "all_reduce", "psum"):
+            for n in sizes:
+                steps, wire = CB.collective_geometry(kind, p, n * 4.0)
+                out.append(CB.Sample(
+                    kind=kind, axis=axis, p=p, elems=n, steps=steps,
+                    wire_bytes=wire,
+                    seconds=gamma + steps * alpha + wire * beta))
+    return out
+
+
+def test_fit_recovers_known_constants_exactly():
+    """Noiseless samples generated from the model must fit back to the
+    generating (γ, α, β) — the least-squares system is exactly
+    determined once two hop counts and a byte sweep are present."""
+    gamma, alpha, beta = 8.1e-4, 3.7e-5, 2.2e-9
+    g, a, b, r2 = CB.fit_constants(_synthetic_samples(gamma, alpha, beta))
+    assert g == pytest.approx(gamma, rel=1e-9)
+    assert a == pytest.approx(alpha, rel=1e-9)
+    assert b == pytest.approx(beta, rel=1e-9)
+    assert r2 == pytest.approx(1.0, abs=1e-12)
+    # degenerate corners recover too (per-call-dominated CPU, pure ring)
+    g, a, b, _ = CB.fit_constants(_synthetic_samples(1e-3, 0.0, 1e-9))
+    assert g == pytest.approx(1e-3, rel=1e-9)
+    assert a == pytest.approx(0.0, abs=1e-12)
+    g, a, b, _ = CB.fit_constants(_synthetic_samples(0.0, 5e-5, 1e-9))
+    assert a == pytest.approx(5e-5, rel=1e-6)
+    assert g == pytest.approx(0.0, abs=1e-9)
+
+
+def test_fit_clamps_nonphysical_solutions():
+    """A fit cannot claim negative latency: pure-bandwidth timings with
+    a tiny anticorrelated latency column clamp γ/α to 0."""
+    # t = wire * beta - steps * eps  (eps tiny): unconstrained lstsq
+    # would fit a negative alpha
+    beta = 1e-9
+    samples = []
+    for p in (2, 4):
+        for n in (1 << 10, 1 << 14, 1 << 18):
+            steps, wire = CB.collective_geometry("all_gather", p, n * 4.0)
+            samples.append(CB.Sample("all_gather", "x", p, n, steps,
+                                     wire, max(wire * beta
+                                               - steps * 1e-7, 0.0)))
+            samples.append(CB.Sample("all_reduce", "x", p, n, 2 * steps,
+                                     2 * wire, max(2 * wire * beta
+                                                   - 2 * steps * 1e-7,
+                                                   0.0)))
+    g, a, b, _ = CB.fit_constants(samples)
+    assert g >= 0.0 and a >= 0.0 and b >= 0.0
+
+
+def test_fit_needs_three_samples():
+    with pytest.raises(ValueError):
+        CB.fit_constants([])
+
+
+def test_collective_geometry_matches_comm_model_pricing():
+    """The fit's regressor rows must use exactly the hop counts and
+    bandwidth-optimal wire bytes collective_time charges — otherwise the
+    fitted α/β would mean something else than the model's."""
+    p, elems, bpe = 4, 1 << 12, 4.0
+    for kind in ("all_gather", "reduce_scatter", "all_reduce"):
+        steps, wire = CB.collective_geometry(kind, p, elems * bpe)
+        hw = CM.HardwareParams(alpha=1.0, gamma=0.25, link_bw=1.0,
+                               bytes_per_elem=bpe)
+        t = CM.collective_time(kind, p, elems, hw)
+        assert t == pytest.approx(0.25 + steps * 1.0 + wire / 1.0,
+                                  rel=1e-12), kind
+    # psum is priced as the all-reduce it is
+    assert CB.collective_geometry("psum", p, 64.0) == \
+        CB.collective_geometry("all_reduce", p, 64.0)
+    # degenerate group
+    assert CB.collective_geometry("all_reduce", 1, 64.0) == (0, 0.0)
+
+
+# --------------------------------------------------------------------- #
+# profile persistence
+# --------------------------------------------------------------------- #
+
+def _profile(**kw):
+    base = dict(backend="cpu", n_devices=8, mesh_shape=(1, 2, 2, 2),
+                alpha=4e-4, gamma=1e-3, link_bw=2e8, flops=2.4e11,
+                overlap_efficiency=0.25, z_claims_first=False,
+                cross_step_efficiency=0.5, bytes_per_elem=2.0,
+                fit_r2=0.9,
+                axis_fits=(CB.AxisFit("x", 2, 4e-4, 5e-9, 0.9, 16,
+                                      gamma=1e-3),),
+                probes={"overlap_z_hidden": 0.25},
+                samples=(CB.Sample("all_gather", "x", 2, 1024, 1,
+                                   2048.0, 1e-3),))
+    base.update(kw)
+    return CB.CalibrationProfile(**base)
+
+
+def test_profile_json_roundtrip_through_hardware_params(tmp_path):
+    """save -> load -> hardware_params() must reproduce every fitted
+    constant, including the claim-order and cross-step knobs."""
+    prof = _profile()
+    path = prof.save(str(tmp_path / "cpu.json"))
+    loaded = CB.CalibrationProfile.load(path)
+    assert loaded == prof
+    hw = loaded.hardware_params()
+    assert hw == CM.HardwareParams(
+        alpha=4e-4, gamma=1e-3, link_bw=2e8, flops=2.4e11,
+        bytes_per_elem=2.0, overlap_efficiency=0.25, z_claims_first=False,
+        cross_step_efficiency=0.5)
+
+
+def test_profile_load_ignores_unknown_keys(tmp_path):
+    """Forward compatibility: a profile written by a newer build (extra
+    JSON keys) must still load."""
+    import json
+    d = _profile().as_dict()
+    d["future_field"] = {"x": 1}
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(d))
+    assert CB.CalibrationProfile.load(str(p)) == _profile()
+
+
+def test_resolve_semantics(tmp_path, monkeypatch):
+    assert CB.resolve(None) is None
+    assert CB.resolve("") is None
+    # auto with no profile on disk: uncalibrated, not an error
+    monkeypatch.chdir(tmp_path)
+    assert CB.resolve("auto") is None
+    assert CB.resolve_hw(None) == CM.TPU_V5E
+    prof = _profile()
+    prof.save(CB.default_path("cpu"))
+    import jax
+    if jax.default_backend() == "cpu":
+        got = CB.resolve("auto")
+        assert got == prof
+    # explicit path always works
+    path = prof.save(str(tmp_path / "explicit.json"))
+    assert CB.resolve(path) == prof
+    assert CB.resolve_hw(path) == prof.hardware_params()
+
+
+# --------------------------------------------------------------------- #
+# --calib changes the model's choice; uncalibrated stays bitwise
+# --------------------------------------------------------------------- #
+
+def test_calib_profile_changes_chosen_factorization(tmp_path):
+    """A latency-dominated profile (huge α) must steer
+    optimize_decomposition away from the deep-ring factorization a
+    bandwidth-dominated profile picks — the constructed-profile twin of
+    'calibration turns the tuner measured'."""
+    layers = CM.transformer_layers(1024, n_layers=4)
+    tokens = 1 << 16
+    lat = _profile(alpha=1.0, gamma=0.0, link_bw=1e30, flops=1e30)
+    bw = _profile(alpha=0.0, gamma=0.0, link_bw=1e6, flops=1e30)
+    p_lat = lat.save(str(tmp_path / "lat.json"))
+    p_bw = bw.save(str(tmp_path / "bw.json"))
+    picks = {}
+    for name, path in (("lat", p_lat), ("bw", p_bw)):
+        hw = CB.resolve_hw(path)
+        picks[name] = CM.optimize_decomposition(
+            layers, tokens, 16, objective="time", hw=hw)[0][0]
+    # pure-bandwidth pricing is the volume model: max g_data (Eq. 5);
+    # pure-latency pricing minimizes total ring hops instead
+    assert picks["bw"].g_data == 16
+    assert picks["lat"] != picks["bw"], picks
+
+
+def _old_claim_order_layer_time(ls, tokens, d, hw, overlap):
+    """The PR-2/PR-4 fixed z-first arithmetic, re-derived: the
+    uncalibrated degeneracy pin for layer_time's claim-order knob."""
+    g = CM.layer_geometry(ls, tokens, d, overlap)
+    t_compute = 6.0 * g.m_local * ls.k * ls.n / (g.gx * g.gy) / hw.flops
+    t_act = (CM.collective_time("all_reduce", g.gx, g.ar_fwd_buf, hw)
+             + CM.collective_time("all_reduce", g.gy, g.ar_bwd_buf, hw))
+    t_z = (g.n_gathers
+           * CM.collective_time("all_gather", d.g_z, g.w_full_per_xy, hw)
+           + CM.collective_time("reduce_scatter", d.g_z, g.w_full_per_xy,
+                                hw))
+    window = hw.overlap_efficiency * t_compute
+    hidden_z = min(t_z, window) if (overlap.matmul and d.g_z > 1) else 0.0
+    hidden_ar = (min(t_act, window - hidden_z)
+                 if overlap.all_reduce else 0.0)
+    return hidden_z, hidden_ar
+
+
+def test_uncalibrated_layer_time_bitwise_unchanged():
+    """Default HardwareParams (z_claims_first=True,
+    cross_step_efficiency=1.0) must reproduce the pre-calibration model
+    exactly — no --calib, no change."""
+    from repro.core.overlap import OverlapConfig
+    ls = CM.LayerShape(1024, 4096)
+    d = CM.Decomposition(2, 2, 2, 2)
+    ov = OverlapConfig.all_on()
+    hw = CM.HardwareParams()          # defaults == uncalibrated
+    st = CM.layer_time(ls, 1 << 14, d, hw, overlap=ov,
+                       include_data_parallel=False)
+    hz, har = _old_claim_order_layer_time(ls, 1 << 14, d, hw, ov)
+    assert st.hidden_comm == hz + har  # bitwise: same ops, same order
+    # explicit defaults are the same point
+    hw2 = CM.HardwareParams(z_claims_first=True, cross_step_efficiency=1.0)
+    st2 = CM.layer_time(ls, 1 << 14, d, hw2, overlap=ov,
+                        include_data_parallel=False)
+    assert st2 == st
+
+
+def test_claim_order_swap_changes_split_not_total():
+    """With a window smaller than either contender, swapping
+    z_claims_first moves time between hidden_z and hidden_ar but
+    conserves hidden + exposed (it is a priority rule, not a discount);
+    with a window large enough for both, the split is order-invariant."""
+    from repro.core.overlap import OverlapConfig
+    ls = CM.LayerShape(1024, 1024)
+    d = CM.Decomposition(1, 2, 2, 4)
+    ov = OverlapConfig.all_on()
+    tokens = 1 << 10  # small compute window: contention is real
+    z_first = CM.HardwareParams(z_claims_first=True)
+    ar_first = CM.HardwareParams(z_claims_first=False)
+    st_z = CM.layer_time(ls, tokens, d, z_first, overlap=ov,
+                         include_data_parallel=False)
+    st_ar = CM.layer_time(ls, tokens, d, ar_first, overlap=ov,
+                          include_data_parallel=False)
+    assert st_z.compute == st_ar.compute
+    assert st_z.exposed_comm + st_z.hidden_comm == pytest.approx(
+        st_ar.exposed_comm + st_ar.hidden_comm, rel=1e-12)
+    # the window binds here, so *what* hides differs between orders
+    assert st_z.hidden_comm == pytest.approx(st_ar.hidden_comm, rel=1e-9)
+    # huge compute: both fit, order invisible
+    st_z2 = CM.layer_time(ls, 1 << 22, d, z_first, overlap=ov,
+                          include_data_parallel=False)
+    st_ar2 = CM.layer_time(ls, 1 << 22, d, ar_first, overlap=ov,
+                           include_data_parallel=False)
+    assert st_z2 == st_ar2
+
+
+def test_cross_step_efficiency_scales_the_window():
+    """cross_step_efficiency: 1.0 == the PR-4 cross-step model, 0.0 ==
+    cross_step off entirely, and the hideable term interpolates
+    linearly in between (it scales only the terminal 2·t_pass)."""
+    from repro.core.gradsync import GradSyncConfig
+    buf, p, mb = 1e6, 4, 2
+    for gs_on in (GradSyncConfig(zero=True, cross_step=True),
+                  GradSyncConfig(zero3=True, cross_step=True)):
+        gs_off = dataclasses.replace(gs_on, cross_step=False)
+        full = CM.HardwareParams(cross_step_efficiency=1.0)
+        none = CM.HardwareParams(cross_step_efficiency=0.0)
+        half = CM.HardwareParams(cross_step_efficiency=0.5)
+        tot_on, hide_full = CM.dp_sync_time(p, buf, gs_on, mb, full)
+        tot_off, hide_off = CM.dp_sync_time(p, buf, gs_off, mb, full)
+        assert tot_on == tot_off  # the knob moves exposure, not volume
+        _, hide_none = CM.dp_sync_time(p, buf, gs_on, mb, none)
+        _, hide_half = CM.dp_sync_time(p, buf, gs_on, mb, half)
+        assert hide_none == pytest.approx(hide_off, rel=1e-12)
+        assert hide_half == pytest.approx(
+            (hide_full + hide_none) / 2.0, rel=1e-12)
+        assert hide_full > hide_none
+
+
+# --------------------------------------------------------------------- #
+# measured harness smoke (host devices) + validation helpers
+# --------------------------------------------------------------------- #
+
+@pytest.mark.skipif(N_DEVICES < 2, reason="calibration needs >= 2 devices")
+def test_run_calibration_smoke_and_roundtrip(tmp_path):
+    """A tiny real calibration on the host mesh: positive fits, sane
+    probes, and a lossless trip through the JSON + HardwareParams."""
+    prof = CB.run_calibration(sizes=(256, 2048), reps=1)
+    assert prof.n_devices == N_DEVICES
+    assert prof.alpha >= 0.0
+    assert prof.link_bw > 0.0 and math.isfinite(prof.link_bw)
+    assert prof.flops > 0.0
+    assert 0.0 <= prof.overlap_efficiency <= 1.0
+    assert 0.0 <= prof.cross_step_efficiency <= 1.0
+    assert prof.axis_fits and all(f.p > 1 for f in prof.axis_fits)
+    assert prof.samples
+    path = prof.save(str(tmp_path / "smoke.json"))
+    loaded = CB.CalibrationProfile.load(path)
+    assert loaded.hardware_params() == prof.hardware_params()
+    assert len(loaded.samples) == len(prof.samples)
+    # the profile must be usable end to end by the optimizer
+    layers = CM.transformer_layers(256)
+    ranked = CM.optimize_decomposition(layers, 4096, 8, objective="time",
+                                       hw=loaded.hardware_params())
+    assert ranked
+
+
+def test_spearman_rank_correlation():
+    assert CB.spearman([1, 2, 3, 4], [10, 20, 30, 40]) == \
+        pytest.approx(1.0)
+    assert CB.spearman([1, 2, 3, 4], [40, 30, 20, 10]) == \
+        pytest.approx(-1.0)
+    # monotone in rank, not in value
+    assert CB.spearman([1, 2, 3, 4], [1, 100, 101, 1e6]) == \
+        pytest.approx(1.0)
+    # constant series has no ranking to correlate with
+    assert CB.spearman([1, 2, 3], [5, 5, 5]) == 0.0
