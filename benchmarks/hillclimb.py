@@ -13,7 +13,11 @@ Variants (each an explicit, named change against the pair's baseline):
   zero         + ZeRO-1 DP sync (bucketed grad rings, sharded AdamW)
   zero3        + ZeRO-3 param-shard streaming (per-layer JIT gathers)
   zero3_prefetch   zero3 with next-layer prefetch/retention
-  factors=a,b,c,d   explicit decomposition override
+  seqring      + context parallelism (--seq-parallel: g_seq chosen by the
+               model, striped ring attention over the seq mesh axis)
+  seqring4     seqring with g_seq pinned to 4
+  factors=a,b,c,d[,s]   explicit decomposition override (5th value opens
+               the seq axis)
 Results append runs/perf/hillclimb.jsonl (per-rank param+optimizer
 bytes land next to the step-time roofline in every record).
 """
@@ -61,9 +65,21 @@ def run_variant(arch, shape, variant, out, probe=True, calib=""):
     elif variant == "dots+cacheag":
         kw["remat_policy"] = "dots"
         kw["cache_gather"] = True
+    elif variant == "seqring":
+        # context parallelism: striped ring attention over the 5th mesh
+        # factor, g_seq chosen jointly by the communication model
+        kw["seq_parallel"] = True
+        kw["overlap"] = True     # ring (not blocking-gather) KV schedule
+    elif variant.startswith("seqring"):
+        kw["seq_parallel"] = True
+        kw["overlap"] = True
+        kw["g_seq"] = int(variant[len("seqring"):])
     elif variant.startswith("factors="):
-        kw["factors"] = tuple(int(v) for v in
-                              variant.split("=")[1].split(","))
+        f = tuple(int(v) for v in variant.split("=")[1].split(","))
+        assert len(f) in (4, 5), "factors=a,b,c,d[,s]"
+        kw["factors"] = f
+        if len(f) > 4 and f[4] > 1:
+            kw["seq_parallel"] = True
     else:
         raise ValueError(variant)
     rec, _ = DR.lower_one(arch, shape, mesh, **kw)

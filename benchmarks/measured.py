@@ -30,7 +30,9 @@ def _train_setup(arch, mesh_shape, *, steps, B, S, overdecompose=1,
     from repro.launch import steps as ST
     from repro.optim.adamw import AdamWConfig, init_state
 
-    mesh = LM.make_smoke_mesh(mesh_shape, ("data", "x", "y", "z"))
+    # a 5th entry opens the context-parallel seq axis (bind_4d maps it)
+    names = ("data", "x", "y", "z", "seq")[:len(mesh_shape)]
+    mesh = LM.make_smoke_mesh(mesh_shape, names)
     axes = LM.bind_4d(mesh)
     cfg = get_config(arch).reduced()
     params, specs = ST.init_model(cfg, axes, jax.random.PRNGKey(seed),
@@ -56,6 +58,9 @@ def _train_setup(arch, mesh_shape, *, steps, B, S, overdecompose=1,
                                    jnp.int32),
              "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
                                    jnp.int32)}
+    # seq-mapped meshes consume the striped token layout (same global
+    # batch, rearranged — the LM loss is permutation-invariant)
+    batch = ST.stripe_batch(batch, axes)
     return cfg, fn, params, state, batch, tools
 
 
@@ -87,7 +92,11 @@ def fig5_measured(steps: int = 6, calib: str = None
               ("gdata2_gx2_gy2", (2, 2, 2, 1)),
               ("gdata2_gy4", (2, 1, 4, 1)),
               ("gdata2_gy2_gz2", (2, 1, 2, 2)),
-              ("gdata1_gy4_gz2", (1, 1, 4, 2))]
+              ("gdata1_gy4_gz2", (1, 1, 4, 2)),
+              # context-parallel points: the 5th factor shards the
+              # sequence (striped ring attention, comm_model ring_exchange)
+              ("gdata2_gy2_gseq2", (2, 1, 2, 1, 2)),
+              ("gdata1_gy2_gseq4", (1, 1, 2, 1, 4))]
     # every decomposition must factor the host devices exactly —
     # make_mesh rejects a mesh smaller than the device count
     shapes = [(n, s) for n, s in shapes
@@ -380,6 +389,90 @@ def dp_sync(steps: int = 4) -> List[Tuple[str, float, str]]:
     assert gap < 1e-3, f"bucketed DP sync changed the loss: {gap}"
     rows.append(("dp_sync/loss_gap", gap,
                  "ring/zero/zero3 vs blocking, fp32"))
+    return rows
+
+
+def ring_attention(steps: int = 4) -> List[Tuple[str, float, str]]:
+    """Context-parallel ring attention, before/after on the train-step HLO
+    (layers/attention.py seq_attn over the 5th mesh axis).
+
+    Three configs of the same model/data on 8 host devices: no seq axis
+    (baseline), g_seq=4 with the blocking KV all-gather, and g_seq=4 with
+    the ring schedule (``OverlapConfig(ring_attention=True)`` — per-hop KV
+    blocks circulate via collective-permute while each hop's partial
+    attention accumulates the online softmax). Each config is compiled
+    ONCE via ``lower().compile()``; its optimized HLO lands in
+    ``runs/bench_hlo/ring_attention_<mode>.hlo.txt`` for the CI artifact.
+    Asserts the contract: the ring mode has NO seq-axis all-gather above
+    scalar size (no rank ever materializes the full sequence — the KV
+    exchange lowers to permute chains), and the loss gap vs the unsharded
+    baseline is ~fp32-reassociation noise (striping only rearranges
+    tokens; the LM loss is permutation-invariant)."""
+    import os
+
+    from repro.core.overlap import OverlapConfig
+    from repro.launch import roofline as RL
+
+    if jax.device_count() < 8:
+        return [("ring_attention/skipped", 0.0,
+                 f"needs 8 devices, have {jax.device_count()}")]
+    pseq = 4
+    hlo_dir = os.path.join("runs", "bench_hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    # seq=4 against y=2 keeps the seq axis's replica-group size
+    # unambiguous in the HLO (dp=x=z=1)
+    modes = [
+        ("noseq", (1, 2, 2, 2), None),
+        ("blocking", (1, 1, 2, 1, pseq), None),
+        ("ring", (1, 1, 2, 1, pseq), OverlapConfig(ring_attention=True)),
+    ]
+    rows, losses, counts, big_seq_ag = [], {}, {}, {}
+    for name, shape, ov in modes:
+        cfg, fn, params, state, batch, _ = _train_setup(
+            "stablelm-1.6b", shape, steps=steps, B=8, S=64, overlap=ov)
+        compiled = fn.lower(params, state, batch).compile()
+        hlo = compiled.as_text()
+        with open(os.path.join(hlo_dir, f"ring_attention_{name}.hlo.txt"),
+                  "w") as f:
+            f.write(hlo)
+        ops = RL.parse_collective_ops(hlo)
+        c = counts[name] = {}
+        for op in ops:
+            c[op.kind] = c.get(op.kind, 0) + 1
+        big_seq_ag[name] = sum(1 for op in ops if op.kind == "all-gather"
+                               and op.group_size == pseq
+                               and op.raw_bytes > 2048)
+        stats = RL.parse_collectives(hlo)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        est = RL.step_time_estimate(float(cost.get("flops", 0.0)),
+                                    stats.bytes_by_kind)
+        params, state, m = compiled(params, state, batch)  # warmup
+        t0 = time.time()
+        for _ in range(steps):
+            params, state, m = compiled(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / steps * 1e6
+        losses[name] = float(m["loss"])
+        rows.append((
+            f"ring_attention/{name}", us,
+            f"ar={c.get('all-reduce', 0)} ag={c.get('all-gather', 0)} "
+            f"seq_ag_big={big_seq_ag[name]} "
+            f"cp={c.get('collective-permute', 0)} "
+            f"exposed_us={est.exposed_comm * 1e6:.1f} "
+            f"hidden_us={est.hidden_comm * 1e6:.1f} "
+            f"loss={losses[name]:.4f}"))
+    # blocking gathers the full KV sequence; the ring must not
+    assert big_seq_ag["blocking"] > 0, big_seq_ag
+    assert big_seq_ag["ring"] == 0, \
+        f"ring mode gathered the full sequence: {big_seq_ag}"
+    assert (counts["ring"].get("collective-permute", 0)
+            > counts["blocking"].get("collective-permute", 0)), counts
+    gap = max(abs(losses[k] - losses["noseq"]) for k in losses)
+    assert gap < 1e-3, f"seq sharding changed the loss: {gap}"
+    rows.append(("ring_attention/loss_gap", gap,
+                 "blocking/ring g_seq=4 vs unsharded, fp32"))
     return rows
 
 

@@ -71,6 +71,7 @@ def main() -> None:
         "overdecomp": measured.overdecomposition_overlap,
         "overlap": measured.overlap_collectives,
         "dp_sync": measured.dp_sync,
+        "ring_attention": measured.ring_attention,
         "kernels": measured.kernel_micro,
         "roofline": roofline_summary,
     }

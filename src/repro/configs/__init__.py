@@ -44,4 +44,9 @@ def skip_reason(arch: str, shape: str) -> str | None:
     if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
         return ("full-attention arch: long_500k requires sub-quadratic "
                 "attention (DESIGN.md §Decode-shape skips)")
+    if shape == "train_128k":
+        cfg = get_config(arch)
+        if cfg.arch_type in ("vlm", "audio") or set(cfg.mixers()) != {"attn"}:
+            return ("train_128k targets context-parallel ring attention "
+                    "(softmax-attention decoder archs only)")
     return None

@@ -15,6 +15,9 @@ class InputShape:
 
 SHAPES = {
     "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    # context-parallel target: 128k tokens/sequence only fits when the
+    # seq dim shards over the seq mesh axis (dryrun --seq-parallel)
+    "train_128k": InputShape("train_128k", 131072, 32, "train"),
     "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
     "long_500k": InputShape("long_500k", 524288, 1, "decode",

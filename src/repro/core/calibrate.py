@@ -12,7 +12,9 @@ hillclimb / benchmark CLIs.
 What is measured (``benchmarks/calibrate.py`` is the CLI harness):
 
   * **γ/α/β per axis class** — ring all-gather / reduce-scatter /
-    all-reduce (``core.mesh`` ring helpers) and the blocking ``psum``
+    all-reduce (``core.mesh`` ring helpers), the blocking ``psum`` and
+    the ``ring_exchange`` KV circulation of ring attention (the seq
+    axis' collective class: p−1 ppermute hops of a full per-rank block)
     over each mapped mesh axis AND the flattened tuple ring (two hop
     counts separate the constants), across a message-size sweep. Each
     timing is one sample ``t = γ + steps · α + wire_bytes · β`` with
@@ -66,7 +68,8 @@ DEFAULT_DIR = os.path.join("runs", "calib")
 #: (kind -> (hop count, wire-byte factor)) as functions of ring size p and
 #: the *full* buffer bytes, matching comm_model.collective_time's
 #: conventions: all_reduce takes the reduced buffer, AG/RS the full one.
-_KINDS = ("all_gather", "reduce_scatter", "all_reduce", "psum")
+_KINDS = ("all_gather", "reduce_scatter", "all_reduce", "psum",
+          "ring_exchange")
 
 
 def collective_geometry(kind: str, p: int, buf_bytes: float
@@ -74,12 +77,16 @@ def collective_geometry(kind: str, p: int, buf_bytes: float
     """(ring hops, wire bytes) of one bandwidth-optimal collective —
     the regressor row of the α/β fit. ``psum`` is priced as the
     all-reduce it is (same wire bytes; the blocking lowering still pays
-    per-hop latency on a ring topology)."""
+    per-hop latency on a ring topology). ``ring_exchange`` is the
+    seq-axis KV circulation of ring attention (p-1 ppermute hops each
+    forwarding the rank's 1/p block of ``buf_bytes``; note
+    ``comm_model.collective_time`` takes the per-rank *block* for this
+    kind while the harness here times the full buffer)."""
     if p <= 1:
         return 0, 0.0
     if kind in ("all_reduce", "psum"):
         return 2 * (p - 1), 2.0 * (p - 1) / p * buf_bytes
-    if kind in ("all_gather", "reduce_scatter"):
+    if kind in ("all_gather", "reduce_scatter", "ring_exchange"):
         return p - 1, (p - 1) / p * buf_bytes
     raise ValueError(f"unknown collective kind {kind!r}")
 
@@ -294,6 +301,20 @@ def _collective_fns(mesh, axis):
         return jax.jit(shard_map(body, mesh=mesh, in_specs=(in_spec,),
                                  out_specs=out_spec, check_vma=False))
 
+    p_ax = math.prod(
+        dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+        for n in (axis if isinstance(axis, tuple) else (axis,)))
+
+    def ring_exchange(v):
+        # the ring-attention KV schedule: each rank's block circulates
+        # the whole ring, one ppermute hop at a time, every hop consumed
+        # (the sum stands in for the hop's partial-attention read)
+        cur, acc = v, v
+        for _ in range(p_ax - 1):
+            cur = M.ppermute_ring(cur, axis)
+            acc = acc + cur
+        return acc
+
     return {
         "all_gather": wrap(lambda v: M.ring_all_gather(v, axis, dim=0),
                            P(axis), P(None)),
@@ -303,6 +324,7 @@ def _collective_fns(mesh, axis):
         "all_reduce": wrap(lambda v: M.ring_all_reduce(v, axis, dim=0),
                            P(None), P(None)),
         "psum": wrap(lambda v: M.psum(v, axis), P(None), P(None)),
+        "ring_exchange": wrap(ring_exchange, P(axis), P(axis)),
     }
 
 
@@ -330,7 +352,8 @@ def measure_axis(mesh, axis, sizes: Sequence[int], *,
         full = jnp.arange(n, dtype=dtype)
         t0 = _timeit(ident, full, reps=reps)
         shard_arg = {"all_gather": full, "reduce_scatter": full,
-                     "all_reduce": full, "psum": full}
+                     "all_reduce": full, "psum": full,
+                     "ring_exchange": full}
         for kind in _KINDS:
             t = max(_timeit(fns[kind], shard_arg[kind], reps=reps) - t0,
                     0.0)

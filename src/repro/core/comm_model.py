@@ -72,18 +72,30 @@ class LayerShape:
     transposed: bool = False
     count: int = 1
     tokens_scale: float = 1.0  # fraction of batch tokens that hit this layer
+    # elements per token of the KV block this layer's output feeds into
+    # the context-parallel ring (2 * n_kv_heads * head_dim on the QKV
+    # projection, 0 elsewhere): with g_seq > 1 the ring circulates
+    # m_local * kv_ring_width / g_y elements per hop, fwd and bwd
+    kv_ring_width: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
 class Decomposition:
+    """``g_seq`` (context parallelism, a 5th factor of the same device
+    budget) defaults to 1 so every 4-factor caller is unchanged; it
+    joins ``g`` but NOT ``g_tensor`` — the seq axis shards activations
+    by token, not weights, so the min_tensor memory floor and the
+    paper's G_tensor-based closed forms see only x*y*z."""
+
     g_data: int
     g_x: int
     g_y: int
     g_z: int
+    g_seq: int = 1
 
     @property
     def g(self) -> int:
-        return self.g_data * self.g_x * self.g_y * self.g_z
+        return self.g_data * self.g_x * self.g_y * self.g_z * self.g_seq
 
     @property
     def g_tensor(self) -> int:
@@ -98,6 +110,14 @@ def allreduce_volume(p: int, buf: float) -> float:
 def gather_or_scatter_volume(p: int, full_buf: float) -> float:
     """All-gather / reduce-scatter volume per participant."""
     return 0.0 if p <= 1 else (p - 1) / p * full_buf
+
+
+def ring_exchange_volume(p: int, buf: float) -> float:
+    """Ring-attention KV circulation volume per participant: p-1
+    ppermute hops each forwarding a *full* per-rank block of ``buf``
+    elements (no 1/p reduction — every rank must see every block), so
+    the class is strictly more expensive per element than AG/RS."""
+    return 0.0 if p <= 1 else (p - 1) * buf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,18 +138,19 @@ class LayerGeometry:
 
     gx: int
     gy: int
-    m_local: float         # tokens hitting this layer, per (data x z) shard
+    m_local: float         # tokens hitting this layer, per (data x z x seq)
     ar_fwd_buf: float      # fwd partial-output all-reduce over gx (Eq. 2)
     ar_bwd_buf: float      # bwd dX all-reduce over gy (Eq. 3)
     w_full_per_xy: float   # z-collective buffer: full weight per x*y shard
     n_gathers: int         # AG_z count (1 when the bwd re-gather is cached)
     dp_buf: float          # DP gradient buffer per device (w / (x*y*z))
+    seq_buf: float         # per-hop KV ring block (elements per seq-rank)
 
 
 def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
                    overlap: Optional[OverlapConfig] = None) -> LayerGeometry:
     gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
-    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z)
+    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z * d.g_seq)
     cached = bool(overlap and overlap.cache_weight_gather)
     w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
     return LayerGeometry(
@@ -138,7 +159,10 @@ def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
         ar_bwd_buf=m_local * ls.k / gx,
         w_full_per_xy=w_full_per_xy,
         n_gathers=1 if cached else 2,
-        dp_buf=w_full_per_xy / d.g_z)
+        dp_buf=w_full_per_xy / d.g_z,
+        # KV heads shard over the layer's output axis (gy for the
+        # untransposed QKV projection); the ring forwards this per hop
+        seq_buf=m_local * ls.kv_ring_width / gy)
 
 
 def dp_sync_volume(p: int, buf: float,
@@ -200,12 +224,18 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     # z-axis weight collectives (4D): AG fwd (+AG bwd if not cached) + RS bwd
     v_z = (g.n_gathers + 1) * gather_or_scatter_volume(d.g_z,
                                                        g.w_full_per_xy)
+    # context-parallel KV ring (5th axis): the attention circulates each
+    # seq-rank's KV block around the ring in the forward and its
+    # gradients back in the backward — 2 ring_exchange passes
+    v_seq = 2.0 * ring_exchange_volume(d.g_seq, g.seq_buf)
     # data-parallel gradient sync (the text measures it as 1e-3 of the
-    # tensor terms but we keep it for completeness)
+    # tensor terms but we keep it for completeness); weight grads are
+    # additionally summed over seq (params replicate across it)
     v_dp = 0.0
     if include_data_parallel:
         v_dp = dp_sync_volume(d.g_data, g.dp_buf, gradsync, microbatches)
-    return ls.count * (v_fp + v_bp + v_z + v_dp)
+        v_dp += allreduce_volume(d.g_seq, g.dp_buf)
+    return ls.count * (v_fp + v_bp + v_z + v_seq + v_dp)
 
 
 def model_volume(layers: Sequence[LayerShape], tokens: int, d: Decomposition,
@@ -304,6 +334,12 @@ def collective_time(kind: str, p: int, buf: float,
         vol, steps = allreduce_volume(p, buf), 2 * (p - 1)
     elif kind in ("all_gather", "reduce_scatter"):
         vol, steps = gather_or_scatter_volume(p, buf), p - 1
+    elif kind == "ring_exchange":
+        # seq-axis KV circulation: p-1 ppermute hops of a FULL per-rank
+        # block (no 1/p factor) — β-heavier per element than AG/RS at
+        # the same hop count, which is why it has its own α-β-γ class
+        # in core/calibrate.py rather than reusing the gather fit
+        vol, steps = ring_exchange_volume(p, buf), p - 1
     else:
         raise ValueError(f"unknown collective kind {kind!r}")
     return (hw.gamma + hw.alpha * steps
@@ -436,6 +472,12 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     t_z = (g.n_gathers
            * collective_time("all_gather", d.g_z, g.w_full_per_xy, hw)
            + collective_time("reduce_scatter", d.g_z, g.w_full_per_xy, hw))
+    # seq-axis KV ring (fwd + bwd circulation) and the seq grad
+    # all-reduce; the latter is a step-end psum like blocking DP —
+    # never hideable here
+    t_seq = 2.0 * collective_time("ring_exchange", d.g_seq, g.seq_buf, hw)
+    t_seq_grad = (collective_time("all_reduce", d.g_seq, g.dp_buf, hw)
+                  if include_data_parallel else 0.0)
     t_dp = dp_hideable = 0.0
     if include_data_parallel:
         t_dp, dp_hideable = dp_sync_time(d.g_data, g.dp_buf, gradsync,
@@ -443,6 +485,13 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     window = hw.overlap_efficiency * t_compute
     want_z = overlap is not None and overlap.matmul and d.g_z > 1
     want_ar = overlap is not None and overlap.all_reduce
+    # hop i+1's KV permute issues before hop i's partial attention
+    # (layers/attention.py seq_attn), so the ring rides the attention
+    # compute itself — it claims the window after z and the activation
+    # ARs (claim order z -> AR -> seq -> DP, the same measured-window
+    # discipline as the rest)
+    want_seq = (overlap is not None and overlap.ring_attention
+                and d.g_seq > 1 and ls.kv_ring_width > 0)
     # window claim order: z weight rings first by default (they pipeline
     # against the very GEMM that consumes/produces the weight);
     # hw.z_claims_first=False swaps it — calibrate.overlap_probe measures
@@ -453,9 +502,12 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     else:
         hidden_ar = min(t_act, window) if want_ar else 0.0
         hidden_z = min(t_z, window - hidden_ar) if want_z else 0.0
-    hidden_dp = min(dp_hideable, max(window - hidden_z - hidden_ar, 0.0))
-    hidden = hidden_z + hidden_ar + hidden_dp
-    exposed = t_act + t_z + t_dp - hidden
+    hidden_seq = (min(t_seq, max(window - hidden_z - hidden_ar, 0.0))
+                  if want_seq else 0.0)
+    hidden_dp = min(dp_hideable,
+                    max(window - hidden_z - hidden_ar - hidden_seq, 0.0))
+    hidden = hidden_z + hidden_ar + hidden_seq + hidden_dp
+    exposed = t_act + t_z + t_seq + t_seq_grad + t_dp - hidden
     return StepTime(ls.count * t_compute, ls.count * exposed,
                     ls.count * hidden)
 
@@ -508,6 +560,11 @@ class Constraints:
     x_divides: Tuple[int, ...] = ()  # dims that g_x must divide
     y_divides: Tuple[int, ...] = ()
     z_divides: Tuple[int, ...] = ()
+    # context parallelism: largest g_seq the search may use (1, the
+    # default, keeps the 4-factor enumeration byte-identical) and the
+    # dims g_seq must divide (the sequence length)
+    max_seq: int = 1
+    seq_divides: Tuple[int, ...] = ()
 
 
 def enumerate_decompositions(g: int, c: Constraints = Constraints()
@@ -517,23 +574,29 @@ def enumerate_decompositions(g: int, c: Constraints = Constraints()
         for g_x in _divisors(rem):
             rem2 = rem // g_x
             for g_z in _divisors(rem2):
-                g_y = rem2 // g_z
-                d = Decomposition(g_data, g_x, g_y, g_z)
-                if d.g_tensor < c.min_tensor:
-                    continue
-                if c.global_batch and c.global_batch % (g_data * g_z):
-                    continue
-                if c.max_x and g_x > c.max_x:
-                    continue
-                if c.max_y and g_y > c.max_y:
-                    continue
-                if any(dim % g_x for dim in c.x_divides):
-                    continue
-                if any(dim % g_y for dim in c.y_divides):
-                    continue
-                if any(dim % g_z for dim in c.z_divides):
-                    continue
-                yield d
+                rem3 = rem2 // g_z
+                for g_seq in _divisors(rem3):
+                    if g_seq > max(c.max_seq, 1):
+                        continue
+                    g_y = rem3 // g_seq
+                    d = Decomposition(g_data, g_x, g_y, g_z, g_seq)
+                    if d.g_tensor < c.min_tensor:
+                        continue
+                    if c.global_batch and c.global_batch % (g_data * g_z):
+                        continue
+                    if c.max_x and g_x > c.max_x:
+                        continue
+                    if c.max_y and g_y > c.max_y:
+                        continue
+                    if any(dim % g_x for dim in c.x_divides):
+                        continue
+                    if any(dim % g_y for dim in c.y_divides):
+                        continue
+                    if any(dim % g_z for dim in c.z_divides):
+                        continue
+                    if any(dim % g_seq for dim in c.seq_divides):
+                        continue
+                    yield d
 
 
 def optimize_decomposition(layers: Sequence[LayerShape], tokens: int, g: int,

@@ -10,10 +10,17 @@ The paper decomposes ``G`` devices as ``G_data x G_x x G_y x G_z``:
   * ``y``    — tensor-parallel columns: shards the output (n) dim of a
     normal layer; activations are replicated over ``y``,
   * ``z``    — depth: co-shards the batch and the weight/optimizer storage
-    (weights all-gathered over ``z`` at use, gradients reduce-scattered).
+    (weights all-gathered over ``z`` at use, gradients reduce-scattered),
+  * ``seq``  — context parallelism: shards the *sequence* (token) dim of
+    activations in a striped layout (seq-rank r holds global positions
+    r, r+p, r+2p, ... — the causal load-balancing stripe); weights stay
+    replicated over ``seq`` and attention runs as a KV ``ppermute`` ring
+    (layers/attention.py).
 
 Setting ``z=None`` (G_z=1) recovers the supplied Tensor3D text verbatim;
-setting additionally ``y=None`` recovers Megatron-LM 1D tensor parallelism.
+setting additionally ``y=None`` recovers Megatron-LM 1D tensor
+parallelism. ``seq=None`` (G_seq=1, the default) recovers the 4D model
+of PRs 1-5 bitwise.
 
 Everything in :mod:`repro.layers` is written against :class:`MeshAxes`, so
 the same model code runs on the assignment-mandated ``("data","model")``
@@ -51,6 +58,8 @@ class MeshAxes:
     x: AxisName = "x"
     y: AxisName = "y"
     z: AxisName = "z"
+    # context parallelism (None == unsharded sequence, the 4D model)
+    seq: AxisName = None
     # static sizes, captured from the physical mesh at bind time
     sizes: Tuple[Tuple[str, int], ...] = ()
     # comm/compute-overlap knobs for the tp primitives (core/overlap.py);
@@ -79,6 +88,10 @@ class MeshAxes:
         return self.size(self.z)
 
     @property
+    def gseq(self) -> int:
+        return self.size(self.seq)
+
+    @property
     def tensor(self) -> int:
         return self.gx * self.gy * self.gz
 
@@ -87,18 +100,29 @@ class MeshAxes:
         """How many ways the global batch is split (data x z)."""
         return self.dp * self.gz
 
+    @property
+    def token_shards(self) -> int:
+        """How many ways the token grid (batch x seq) is split."""
+        return self.batch_shards * self.gseq
+
     def axis(self, logical: str) -> AxisName:
-        return {"data": self.data, "x": self.x, "y": self.y, "z": self.z}[logical]
+        return {"data": self.data, "x": self.x, "y": self.y, "z": self.z,
+                "seq": self.seq}[logical]
 
     def all_names(self) -> Tuple[str, ...]:
         out: Tuple[str, ...] = ()
-        for a in (self.data, self.x, self.y, self.z):
+        for a in (self.data, self.x, self.y, self.z, self.seq):
             out += _names(a)
         return out
 
     def batch_axes(self) -> Tuple[str, ...]:
         """Mesh axes the batch dim is sharded over (data then z)."""
         return _names(self.data) + _names(self.z)
+
+    def token_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the token grid is sharded over (batch + seq) — the
+        reduction set for per-token sums like the LM loss."""
+        return self.batch_axes() + _names(self.seq)
 
     def swap_xy(self) -> "MeshAxes":
         return dataclasses.replace(self, x=self.y, y=self.x)
@@ -122,7 +146,8 @@ class MeshAxes:
 
 
 def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
-              y: AxisName = None, z: AxisName = None) -> MeshAxes:
+              y: AxisName = None, z: AxisName = None,
+              seq: AxisName = None) -> MeshAxes:
     """Bind logical 4D axes to a physical mesh, validating names.
 
     Tuple axes must list their names in mesh-axis order: the flattened
@@ -133,7 +158,7 @@ def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
     sizes = tuple(zip(mesh.axis_names, mesh.devices.shape))
     known = dict(sizes)
     order = {name: i for i, name in enumerate(mesh.axis_names)}
-    for a in (data, x, y, z):
+    for a in (data, x, y, z, seq):
         n = _names(a)
         for name in n:
             if name not in known:
@@ -144,7 +169,7 @@ def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
             raise ValueError(
                 f"tuple axis {n!r} must list names in mesh-axis order "
                 f"{mesh.axis_names} (ring collectives linearize by it)")
-    return MeshAxes(data=data, x=x, y=y, z=z, sizes=sizes)
+    return MeshAxes(data=data, x=x, y=y, z=z, seq=seq, sizes=sizes)
 
 
 # ---------------------------------------------------------------------- #
@@ -321,6 +346,37 @@ def ring_all_reduce(v, axis: AxisName, *, dim: int = -1):
         return jax.lax.psum(v, n)
     return ring_all_gather(ring_reduce_scatter(v, axis, dim=dim), axis,
                            dim=dim)
+
+
+def stripe_seq(v, p: int, *, dim: int = 1):
+    """Permute a global sequence dim into the striped context-parallel
+    layout: contiguous shard r of the result holds global positions
+    ``r, r + p, r + 2p, ...`` (``result[r*C + j] == v[j*p + r]`` with
+    ``C = T // p``), so a plain ``PartitionSpec`` shard over the seq axis
+    lands each rank the causal load-balancing stripe. Identity at p == 1.
+    Runs OUTSIDE shard_map, on the global batch."""
+    if p <= 1:
+        return v
+    dim = dim % v.ndim
+    t = v.shape[dim]
+    if t % p:
+        raise ValueError(f"stripe_seq: dim {dim} of size {t} not "
+                         f"divisible by g_seq {p}")
+    shape = v.shape[:dim] + (t // p, p) + v.shape[dim + 1:]
+    return jnp.swapaxes(v.reshape(shape), dim, dim + 1).reshape(v.shape)
+
+
+def unstripe_seq(v, p: int, *, dim: int = 1):
+    """Inverse of :func:`stripe_seq` (``result[j*p + r] == v[r*C + j]``)."""
+    if p <= 1:
+        return v
+    dim = dim % v.ndim
+    t = v.shape[dim]
+    if t % p:
+        raise ValueError(f"unstripe_seq: dim {dim} of size {t} not "
+                         f"divisible by g_seq {p}")
+    shape = v.shape[:dim] + (p, t // p) + v.shape[dim + 1:]
+    return jnp.swapaxes(v.reshape(shape), dim, dim + 1).reshape(v.shape)
 
 
 def axis_index(axis: AxisName):

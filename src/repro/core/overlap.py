@@ -78,6 +78,19 @@ class OverlapConfig:
     cache_weight_gather: keep the z-gathered weight from the forward as a
     residual instead of re-gathering it in the backward (EXPERIMENTS.md
     §Perf).
+
+    ring_attention: circulate per-hop KV blocks over the ``seq`` mesh
+    axis as ``ppermute`` ring steps (layers/attention.py ``seq_attn``),
+    with hop i+1's permute issued before hop i's partial-attention
+    compute so the exchange hides under attention math. Off keeps the
+    blocking schedule (one KV all-gather over ``seq``). Inert when the
+    seq axis is unmapped (g_seq = 1: both paths reduce to the plain
+    ``attn_core`` call, bit for bit).
+
+    embed_gather: ring-decompose the embedding table's z-axis all-gather
+    (``parallel.embedding_lookup``) into ``ppermute`` hops —
+    ``mesh.ring_all_gather`` is bitwise the blocking gather, so this
+    only changes exposure, never values.
     """
 
     matmul: bool = False
@@ -87,6 +100,8 @@ class OverlapConfig:
     z_chunks: int = 1
     ar_chunks: int = 1
     cache_weight_gather: bool = False
+    ring_attention: bool = False
+    embed_gather: bool = False
 
     def __post_init__(self):
         if self.z_chunks < 1:
@@ -97,11 +112,13 @@ class OverlapConfig:
     @property
     def any_enabled(self) -> bool:
         return (self.matmul or self.batched_matmul or self.tied_logits
-                or self.all_reduce)
+                or self.all_reduce or self.ring_attention
+                or self.embed_gather)
 
     @classmethod
     def all_on(cls, *, z_chunks: int = 1, ar_chunks: int = 1,
                cache_weight_gather: bool = False) -> "OverlapConfig":
         return cls(matmul=True, batched_matmul=True, tied_logits=True,
                    all_reduce=True, z_chunks=z_chunks, ar_chunks=ar_chunks,
-                   cache_weight_gather=cache_weight_gather)
+                   cache_weight_gather=cache_weight_gather,
+                   ring_attention=True, embed_gather=True)

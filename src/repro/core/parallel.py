@@ -399,7 +399,13 @@ def embedding_lookup(tokens, table, axes: M.MeshAxes):
 
 
 def _emb_fwd(tokens, table, axes):
-    tf = M.all_gather(table, axes.z, dim=1)
+    if axes.overlap.embed_gather:
+        # ring-decomposed AG_z: same blocks in the same positions
+        # (bitwise-identical result), but as a ppermute chain the
+        # scheduler can start the lookup on resident shards early
+        tf = M.ring_all_gather(table, axes.z, dim=1)
+    else:
+        tf = M.all_gather(table, axes.z, dim=1)
     v_local = tf.shape[0]
     start = M.axis_index(axes.y) * v_local
     local = tokens - start

@@ -62,6 +62,126 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        ).astype(o_ref.dtype)
 
 
+def _partial_kernel(q_ref, k_ref, v_ref, m_in_ref, l_in_ref, acc_in_ref,
+                    o_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref, *,
+                    n_kv: int, bq: int, bk: int, causal: bool, window: int,
+                    scale: float, q_len: int, kv_len: int, q_pos0: int,
+                    q_stride: int, k_pos0: int, k_stride: int):
+    """One *partial* online-softmax pass: same streaming update as
+    :func:`_kernel` but (m, l, acc) flow in and out unnormalized, so hops
+    of a ring (or pages of a paged KV cache) chain through it.
+
+    Q/K positions are affine in the local index (``pos0 + i * stride``) —
+    stride g_seq with the striped context-parallel layout, stride 1 for
+    contiguous blocks — so causal/window masking runs on *global*
+    positions while the refs hold local shards. Keys at local index >=
+    ``kv_len`` (block padding) and queries >= ``q_len`` are masked; a row
+    that sees no valid key keeps its carry exactly (p is zeroed under the
+    mask, so a NEG_INF running max cannot leak exp(0) mass into l)."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = m_in_ref[0, 0]
+        l_ref[...] = l_in_ref[0, 0]
+        acc_ref[...] = acc_in_ref[0, 0]
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    li = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    lj = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    iq = q_pos0 + li * q_stride                     # global q positions
+    jk = k_pos0 + lj * k_stride                     # global k positions
+    mask = (li < q_len) & (lj < kv_len)
+    if causal:
+        mask &= iq >= jk
+    if window > 0:
+        mask &= (iq - jk) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # under full masking m_new stays NEG_INF and s - m_new == 0: the
+    # explicit mask keeps that exp(0) out of l/acc (carry passes through)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] \
+        + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...]
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "q_len", "kv_len", "q_pos0",
+    "q_stride", "k_pos0", "k_stride", "interpret"))
+def flash_attention_partial(q, k, v, m, l, acc, *, causal: bool = True,
+                            window: int = 0, bq: int = 128, bk: int = 128,
+                            q_len: int = 0, kv_len: int = 0,
+                            q_pos0: int = 0, q_stride: int = 1,
+                            k_pos0: int = 0, k_stride: int = 1,
+                            interpret: bool = True):
+    """Variable-length / partial-block flash attention over ONE KV block,
+    carrying the online softmax state across calls.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D); m, l: (B, Hq, T) fp32 running
+    max / denominator; acc: (B, Hq, T, D) fp32 unnormalized numerator.
+    Returns the updated (acc, m, l) — *not* normalized: the caller chains
+    further blocks (ring hops, KV pages) and finalizes with
+    ``acc / max(l, 1e-30)``. Seed the first call with m = NEG_INF,
+    l = acc = 0; a single call seeded that way + finalize equals
+    :func:`flash_attention`. ``q_len``/``kv_len`` mask block padding
+    (T % bq / S % bk handled by kernels/ops.py), ``*_pos0``/``*_stride``
+    give each local index its global position (striped context
+    parallelism: stride = g_seq)."""
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, T)
+    bk = min(bk, S)
+    assert T % bq == 0 and S % bk == 0
+    grid = (B, Hq, T // bq, S // bk)
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(
+        _partial_kernel, n_kv=grid[3], bq=bq, bk=bk, causal=causal,
+        window=window, scale=scale, q_len=q_len or T, kv_len=kv_len or S,
+        q_pos0=q_pos0, q_stride=q_stride, k_pos0=k_pos0, k_stride=k_stride)
+    row = pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi))
+    mat = pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0))
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            mat,
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            row, row, mat,
+        ],
+        out_specs=[mat, row, row],
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, T, D), f32),
+                   jax.ShapeDtypeStruct((B, Hq, T), f32),
+                   jax.ShapeDtypeStruct((B, Hq, T), f32)],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, m.astype(f32), l.astype(f32), acc.astype(f32))
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "kv_len", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 
 from repro.kernels.block_matmul import block_matmul as _bmm
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_attention import (
+    flash_attention_partial as _flash_partial)
 from repro.kernels.rmsnorm import rmsnorm as _rms
 from repro.kernels.selective_scan import selective_scan as _scan
 
@@ -49,6 +51,31 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
     out = _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
                  kv_len=S0, interpret=interpret)
     return out[:, :, :T0, :]
+
+
+def flash_attention_partial(q, k, v, m, l, acc, *, causal=True, window=0,
+                            bq=128, bk=128, q_pos0=0, q_stride=1,
+                            k_pos0=0, k_stride=1, interpret=True):
+    """Padded partial-block flash attention over one KV block, carrying
+    the unnormalized online-softmax state (m, l, acc) across calls —
+    the ring-attention hop / paged-KV entry point.
+
+    Handles non-dividing T/S by block padding: padded queries carry
+    their state through untouched, padded keys are masked via
+    ``kv_len``. Returns the updated (acc, m, l) sliced back to T;
+    finalize with ``acc / max(l, 1e-30)`` after the last block."""
+    T0, S0 = q.shape[2], k.shape[2]
+    q, _ = _pad_to(q, bq, 2)
+    k, _ = _pad_to(k, bk, 2)
+    v, _ = _pad_to(v, bk, 2)
+    m, _ = _pad_to(m, bq, 2)
+    l, _ = _pad_to(l, bq, 2)
+    acc, _ = _pad_to(acc, bq, 2)
+    acc, m, l = _flash_partial(
+        q, k, v, m, l, acc, causal=causal, window=window, bq=bq, bk=bk,
+        q_len=T0, kv_len=S0, q_pos0=q_pos0, q_stride=q_stride,
+        k_pos0=k_pos0, k_stride=k_stride, interpret=interpret)
+    return acc[:, :, :T0, :], m[:, :, :T0], l[:, :, :T0]
 
 
 def rmsnorm(x, gamma, *, eps=1e-6, bm=256, interpret=True):

@@ -202,12 +202,17 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               overlap: bool = False, z_chunks: int = 1, ar_chunks: int = 1,
               zero: bool = False, zero3: bool = False,
               zero3_prefetch: bool = False, dp_bucket_mb: float = 4.0,
-              objective: str = "auto", calib: str = ""):
+              objective: str = "auto", calib: str = "",
+              seq_parallel: bool = False, g_seq: int = 0):
     # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
     z_chunks = z_chunks if overlap else 1
     ar_chunks = ar_chunks if overlap else 1
+    # context parallelism is a train-path knob; g_seq (0 = let the
+    # chooser pick) only means something with --seq-parallel
+    seq_parallel = seq_parallel and SHAPES[shape_name].kind == "train"
+    g_seq = g_seq if seq_parallel else 0
     zero = zero and not zero3          # zero3 supersedes the ZeRO-1 path
     zero3_prefetch = zero3_prefetch if zero3 else False
     dp_bucket_mb = dp_bucket_mb if (zero or zero3) else 0.0
@@ -238,7 +243,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
             factors = choose_factors(cfg, shape,
                                      pods=2 if multi_pod else 1,
                                      overlap=ov if overlap else None,
-                                     objective=objective, hw=hw)
+                                     objective=objective, hw=hw,
+                                     seq_parallel=seq_parallel, g_seq=g_seq)
         mesh = LM.make_production_mesh_4d(*factors, multi_pod=multi_pod)
         axes = LM.bind_4d(mesh)
     cfg.validate_axes(axes)
@@ -268,6 +274,11 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         mem["opt_bytes_per_rank"] = _tree_bytes_per_rank(mesh, ost, ops)
         mem["param_opt_bytes_per_rank"] = (mem["param_bytes_per_rank"]
                                            + mem["opt_bytes_per_rank"])
+        # the transient (activation/workspace) side of the per-rank
+        # budget — what context parallelism shrinks by ~1/g_seq (the
+        # seq-shard memory check of benchmarks/hillclimb.py)
+        if "temp_size_in_bytes" in mem:
+            mem["activation_bytes_per_rank"] = mem["temp_size_in_bytes"]
 
     # (2) depth probes (unrolled, exact HLO costs) -> linear extrapolation.
     # XLA's cost model counts a scan body once regardless of trip count, so
@@ -316,7 +327,11 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "multi_pod": multi_pod, "devices": int(n_dev),
         "factors": {"g_data": factors[0], "g_x": factors[1],
-                    "g_y": factors[2], "g_z": factors[3]},
+                    "g_y": factors[2], "g_z": factors[3],
+                    "g_seq": factors[4] if len(factors) > 4 else 1},
+        "seq_parallel": seq_parallel,
+        "g_seq": int(factors[4]) if len(factors) > 4 else 1,
+        "g_seq_req": g_seq,   # the requested pin (0 = auto) — resume key
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
         "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
@@ -344,8 +359,14 @@ def _feasible(cfg, factors, multi_pod=False):
 
 def choose_factors(cfg, shape, pods: int = 1,
                    overlap: OverlapConfig = None,
-                   objective: str = "auto", hw=None):
-    """Communication-model-optimal (g_data, g_x, g_y, g_z) for this pair.
+                   objective: str = "auto", hw=None,
+                   seq_parallel: bool = False, g_seq: int = 0):
+    """Communication-model-optimal (g_data, g_x, g_y, g_z, g_seq) for
+    this pair.
+
+    With ``seq_parallel`` the enumeration opens the 5th (context) factor
+    — ``g_seq`` jointly chosen with the others by the same objective
+    (the KV ring_exchange class prices it), or pinned when ``g_seq`` > 0.
 
     ``objective='auto'`` (the default) ranks by the α-β overlap-aware
     ``predict_step_time`` whenever ``overlap`` is set (ring-hidden z
@@ -371,11 +392,18 @@ def choose_factors(cfg, shape, pods: int = 1,
     gb = sh.global_batch // pods if sh.global_batch else 0
     cons = cfg.tp_constraints(gb)
     z_div = () if shape.kind == "train" else (1,)  # force g_z = 1
+    # seq parallelism is a train-only trade (ring attention has no decode
+    # analogue here) and needs g_seq | seq_len for the striped layout
+    max_seq_f = 1
+    if seq_parallel and shape.kind == "train":
+        max_seq_f = g_seq if g_seq > 0 else sh.seq_len
     cons = CM.Constraints(global_batch=cons.global_batch,
                           x_divides=cons.x_divides,
                           y_divides=cons.y_divides,
                           z_divides=z_div,
-                          min_tensor=_min_tensor(cfg, shape))
+                          min_tensor=_min_tensor(cfg, shape),
+                          max_seq=max_seq_f,
+                          seq_divides=(sh.seq_len,) if max_seq_f > 1 else ())
     # tokens processed per step: full sequence for train AND prefill
     # (a prefill forward is one fwd pass over B*S tokens); decode is one
     # token per sequence. (Mis-pricing prefill as B tokens made the model
@@ -393,14 +421,22 @@ def choose_factors(cfg, shape, pods: int = 1,
     if objective == "time":
         obj = dict(objective="time", overlap=overlap, hw=hw)
     ranked = CM.optimize_decomposition(
-        list(cfg.comm_layers()), tokens, 256, cons, top_k=64,
+        list(cfg.comm_layers()), tokens, 256, cons,
+        top_k=64 if max_seq_f <= 1 else 512,
         include_data_parallel=(shape.kind == "train"), **obj)
+    if g_seq > 0:
+        pinned = [t for t in ranked if t[0].g_seq == g_seq]
+        if not pinned:
+            raise ValueError(
+                f"no feasible decomposition with g_seq={g_seq} for "
+                f"{cfg.name} x {shape.name}")
+        ranked = pinned
     for d, _ in ranked:
-        f = (d.g_data, d.g_x, d.g_y, d.g_z)
+        f = (d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq)
         if _feasible(cfg, f, multi_pod=(pods > 1)):
             return f
     d = ranked[0][0]
-    return d.g_data, d.g_x, d.g_y, d.g_z
+    return d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq
 
 
 def _min_tensor(cfg, shape) -> int:
@@ -466,6 +502,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dp-bucket-mb", type=float, default=4.0,
                     help="fp32 gradient bucket size bound in MiB "
                          "(with --zero/--zero3)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="context parallelism: open the 5th (seq) mesh "
+                         "factor — the sequence dim shards striped over "
+                         "it and attention runs as a KV ppermute ring "
+                         "(train shapes only)")
+    ap.add_argument("--g-seq", type=int, default=0,
+                    help="pin the seq factor (with --seq-parallel; "
+                         "0 = let the communication model choose it "
+                         "jointly with g_data/g_x/g_y/g_z)")
     ap.add_argument("--objective", default="auto",
                     choices=["auto", "time", "volume"],
                     help="factor-chooser objective: auto = the α-β "
@@ -500,6 +545,7 @@ def main():
     zero = args.zero and not args.zero3
     zero3_prefetch = args.zero3_prefetch if args.zero3 else False
     dp_bucket_mb = args.dp_bucket_mb if (zero or args.zero3) else 0.0
+    g_seq_arg = args.g_seq if args.seq_parallel else 0
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -518,7 +564,9 @@ def main():
                               r.get("zero3_prefetch", False),
                               r.get("dp_bucket_mb", 0.0),
                               r.get("objective", "auto"),
-                              r.get("calib", "")))
+                              r.get("calib", ""),
+                              r.get("seq_parallel", False),
+                              r.get("g_seq_req", 0)))
                 except Exception:
                     pass
 
@@ -533,7 +581,8 @@ def main():
                     key = (arch, shape, mk, mp, args.overdecompose,
                            args.overlap, z_chunks, ar_chunks,
                            zero, args.zero3, zero3_prefetch, dp_bucket_mb,
-                           args.objective, args.calib)
+                           args.objective, args.calib,
+                           args.seq_parallel, g_seq_arg)
                     if key in done:
                         print(f"cached {key}")
                         continue
@@ -551,6 +600,8 @@ def main():
                             zero3_prefetch=zero3_prefetch,
                             dp_bucket_mb=args.dp_bucket_mb,
                             objective=args.objective, calib=args.calib,
+                            seq_parallel=args.seq_parallel,
+                            g_seq=g_seq_arg,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -573,6 +624,8 @@ def main():
                                "zero3_prefetch": zero3_prefetch,
                                "dp_bucket_mb": dp_bucket_mb,
                                "calib": args.calib,
+                               "seq_parallel": args.seq_parallel,
+                               "g_seq_req": g_seq_arg,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

@@ -55,22 +55,31 @@ def bind_production(mesh, cfg=None) -> M.MeshAxes:
                      f"({cfg.axes_ok(axes_y)}; {cfg.axes_ok(axes_x)})")
 
 
-def make_production_mesh_4d(g_data: int, g_x: int, g_y: int, g_z: int, *,
-                            multi_pod: bool = False):
-    """(pod,) data x x x y x z with the same device counts (256 / 512)."""
-    per_pod = g_data * g_x * g_y * g_z
+def make_production_mesh_4d(g_data: int, g_x: int, g_y: int, g_z: int,
+                            g_seq: int = 1, *, multi_pod: bool = False):
+    """(pod,) data x x x y x z (x seq) with the same device counts
+    (256 / 512). ``g_seq`` joins the product (context parallelism is a
+    5th factor of the same budget) and only appears as a mesh axis when
+    > 1, so every 4-factor caller keeps its exact old mesh."""
+    per_pod = g_data * g_x * g_y * g_z * g_seq
     assert per_pod == 256, \
         f"4D factors must multiply to 256 per pod, got {per_pod}"
+    shape: Tuple[int, ...] = (g_data, g_x, g_y, g_z)
+    names: Tuple[str, ...] = ("data", "x", "y", "z")
+    if g_seq > 1:
+        shape += (g_seq,)
+        names += ("seq",)
     if multi_pod:
-        return _mk((2, g_data, g_x, g_y, g_z),
-                   ("pod", "data", "x", "y", "z"))
-    return _mk((g_data, g_x, g_y, g_z), ("data", "x", "y", "z"))
+        return _mk((2,) + shape, ("pod",) + names)
+    return _mk(shape, names)
 
 
 def bind_4d(mesh) -> M.MeshAxes:
+    seq = "seq" if "seq" in mesh.axis_names else None
     if "pod" in mesh.axis_names:
-        return M.bind_axes(mesh, data=("pod", "data"), x="x", y="y", z="z")
-    return M.bind_axes(mesh, data=("data",), x="x", y="y", z="z")
+        return M.bind_axes(mesh, data=("pod", "data"), x="x", y="y", z="z",
+                           seq=seq)
+    return M.bind_axes(mesh, data=("data",), x="x", y="y", z="z", seq=seq)
 
 
 def make_smoke_mesh(shape: Tuple[int, ...] = (2, 2, 2, 1),

@@ -58,10 +58,16 @@ def batch_struct(cfg: ArchConfig, axes: M.MeshAxes, global_batch: int,
     """GLOBAL ShapeDtypeStructs + PartitionSpecs for one batch."""
     bax = axes.batch_axes()
     bspec = axes.pspec(bax, None)
+    # training tokens/labels also shard their seq dim over the context-
+    # parallel axis (None when unmapped — same spec as before). The
+    # global array must be fed in the *striped* layout: stripe_batch
+    # below / core.mesh.stripe_seq, so rank r's contiguous shard holds
+    # global positions {r, r + g_seq, ...} for causal load balance.
+    tspec = axes.pspec(bax, axes.seq) if kind == "train" else bspec
     toks = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
-    out: Dict[str, Tuple[Any, P]] = {"tokens": (toks, bspec)}
+    out: Dict[str, Tuple[Any, P]] = {"tokens": (toks, tspec)}
     if kind == "train":
-        out["labels"] = (toks, bspec)
+        out["labels"] = (toks, tspec)
     if cfg.arch_type == "vlm" and kind in ("train", "prefill"):
         ec = cfg.encoder
         out["image_embeds"] = (
@@ -72,6 +78,22 @@ def batch_struct(cfg: ArchConfig, axes: M.MeshAxes, global_batch: int,
         out["frames"] = (
             jax.ShapeDtypeStruct((global_batch, ec.n_ctx, cfg.d_model),
                                  dtype), axes.pspec(bax, None, axes.x))
+    return out
+
+
+def stripe_batch(batch, axes: M.MeshAxes):
+    """Host-side striping of a global train batch for context
+    parallelism: permutes tokens/labels along seq so the contiguous
+    per-rank shards of ``batch_struct``'s specs carry the striped
+    layout decoder_hidden expects. No-op when seq is unmapped; the
+    LM loss is a per-token mean, so the permutation is loss-neutral."""
+    p = axes.gseq
+    if p <= 1:
+        return batch
+    out = dict(batch)
+    for k in ("tokens", "labels"):
+        if k in out:
+            out[k] = M.stripe_seq(out[k], p, dim=1)
     return out
 
 
@@ -232,6 +254,15 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
                 grads = jax.tree.map(lambda g: g / n, grads)
         else:
             (loss, metrics), grads = vg(params, batch)
+
+        if axes.gseq > 1:
+            # params are replicated over seq; each seq-rank's grads hold
+            # only its own tokens' contributions (the KV ring transposes
+            # back to the local shard), so sum them like a second DP axis
+            if shards is not None:
+                shards = [M.psum(s, axes.seq) for s in shards]
+            elif grads is not None:
+                grads = jax.tree.map(lambda g: M.psum(g, axes.seq), grads)
 
         if gs.zero3:
             if shards is None:

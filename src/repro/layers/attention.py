@@ -44,6 +44,16 @@ def _plain_rms(x, gamma, eps=1e-6):
             ).astype(x.dtype)
 
 
+def _softmax_fp32(scores):
+    """Softmax accumulated in fp32 regardless of the activation dtype.
+
+    Every attention path routes through this (or the fp32 (m, l, acc)
+    online-softmax carries): a reduced-precision exp/sum would break the
+    cross-hop rescaling parity the ring-attention schedule relies on —
+    tests/test_ring_attention.py pins the bf16-vs-fp32 tolerance."""
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
 # ---------------------------------------------------------------------- #
 # attention core (pure jnp oracle; the Pallas flash kernel in
 # repro.kernels mirrors this and is validated against it)
@@ -67,7 +77,8 @@ def attn_core(q, k, v, *, causal: bool = True, window: int = 0,
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     qg = q.reshape(B, Tq, nkv, g, d)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
     iq = (jnp.arange(Tq) + q_pos0)[:, None]
     jk = jnp.arange(Tk)[None, :]
     mask = jnp.ones((Tq, Tk), bool)
@@ -76,8 +87,9 @@ def attn_core(q, k, v, *, causal: bool = True, window: int = 0,
     if window > 0:
         mask &= (iq - jk) < window
     scores = jnp.where(mask, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    probs = _softmax_fp32(scores)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
     return out.reshape(B, Tq, nq, v.shape[-1]).astype(q.dtype)  # dv may != dq (MLA)
 
 
@@ -143,6 +155,173 @@ def attn_core_chunked(q, k, v, *, causal: bool = True, window: int = 0,
     _, outs = jax.lax.scan(q_step, 0, (jnp.arange(nQ), qc))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, nQ * bq, nq, v.shape[-1])
     return out[:, :Tq].astype(q.dtype)
+
+
+def attn_partial_init(B, Tq, nkv, g, dv):
+    """Fresh fp32 online-softmax carry (m, l, acc) for
+    :func:`attn_core_partial` — the 'nothing attended yet' state."""
+    return (jnp.full((B, nkv, g, Tq), NEG_INF, jnp.float32),
+            jnp.zeros((B, nkv, g, Tq), jnp.float32),
+            jnp.zeros((B, nkv, g, Tq, dv), jnp.float32))
+
+
+def attn_core_partial(q, k, v, carry, *, q_pos, k_pos,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      bq: int = 512, bk: int = 1024):
+    """One *partial* online-softmax pass over a single KV block, carrying
+    (m, l, acc) across calls — the jnp oracle of
+    ``kernels.flash_attention_partial`` and the per-hop core of
+    :func:`seq_attn`'s ring schedule.
+
+    q: (B, Tq, nq, d) local queries; k/v: (B, Tk, nkv, dv) one KV block;
+    ``q_pos``/``k_pos``: (Tq,)/(Tk,) *global* token positions of each
+    local index (striped context parallelism hands in stride-g_seq
+    vectors; they may be non-monotone). The carry is the fp32
+    (m, l, acc) of :func:`attn_partial_init`; chain blocks then finalize
+    with :func:`attn_partial_finalize`. Internally chunked like
+    :func:`attn_core_chunked`, so no (Tq, Tk) score ever materializes.
+    A query row whose keys are all masked passes its carry through
+    unchanged (p is zeroed under the mask — a NEG_INF running max never
+    leaks exp(0) mass into l)."""
+    B, Tq, nq, d = q.shape
+    Tk, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    m, l, acc = carry
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    pq = (-Tq) % bq
+    pk = (-Tk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos.astype(jnp.int32), (0, pq))
+    kpos = jnp.pad(k_pos.astype(jnp.int32), (0, pk))
+    kvalid = jnp.pad(jnp.ones((Tk,), bool), (0, pk))
+    nQ, nK = qp.shape[1] // bq, kp.shape[1] // bk
+
+    qc = jnp.moveaxis(qp.reshape(B, nQ, bq, nkv, g, d), 1, 0)
+    kc = jnp.moveaxis(kp.reshape(B, nK, bk, nkv, d), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(B, nK, bk, nkv, dv), 1, 0)
+    mq = jnp.moveaxis(jnp.pad(m, ((0, 0),) * 3 + ((0, pq),),
+                              constant_values=NEG_INF
+                              ).reshape(B, nkv, g, nQ, bq), 3, 0)
+    lq = jnp.moveaxis(jnp.pad(l, ((0, 0),) * 3 + ((0, pq),)
+                              ).reshape(B, nkv, g, nQ, bq), 3, 0)
+    aq = jnp.moveaxis(jnp.pad(acc, ((0, 0),) * 3 + ((0, pq), (0, 0))
+                              ).reshape(B, nkv, g, nQ, bq, dv), 3, 0)
+
+    def q_step(_, xs):
+        qb, qpb, m0, l0, a0 = xs                # qb (B, bq, nkv, g, d)
+        qb = qb.astype(jnp.float32)
+
+        def kv_step(cr, ys):
+            mc, lc, ac = cr
+            kb, vb, kpb, kvb = ys
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb,
+                           kb.astype(jnp.float32),
+                           preferred_element_type=jnp.float32) * scale
+            mask = kvb[None, :]
+            iq = qpb[:, None]
+            jk = kpb[None, :]
+            if causal:
+                mask &= iq >= jk
+            if window > 0:
+                mask &= (iq - jk) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(mc, jnp.max(s, axis=-1))
+            # the explicit mask keeps exp(0) out of l when a row is still
+            # fully masked (m_new == NEG_INF, s - m_new == 0)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(mc - m_new)
+            lc = alpha * lc + jnp.sum(p, axis=-1)
+            ac = alpha[..., None] * ac + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (m_new, lc, ac), 0
+
+        (m1, l1, a1), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                       (kc, vc, kpos.reshape(nK, bk),
+                                        kvalid.reshape(nK, bk)))
+        return 0, (m1, l1, a1)
+
+    _, (mo, lo, ao) = jax.lax.scan(
+        q_step, 0, (qc, qpos.reshape(nQ, bq), mq, lq, aq))
+    m = jnp.moveaxis(mo, 0, 3).reshape(B, nkv, g, nQ * bq)[..., :Tq]
+    l = jnp.moveaxis(lo, 0, 3).reshape(B, nkv, g, nQ * bq)[..., :Tq]
+    acc = jnp.moveaxis(ao, 0, 3).reshape(B, nkv, g, nQ * bq, dv
+                                         )[..., :Tq, :]
+    return m, l, acc
+
+
+def attn_partial_finalize(carry, dtype):
+    """Normalize a chained (m, l, acc) carry into the (B, Tq, nq, dv)
+    attention output."""
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B, nkv, g, Tq, dv)
+    B, nkv, g, Tq, dv = out.shape
+    return jnp.moveaxis(out, 3, 1).reshape(B, Tq, nkv * g, dv
+                                           ).astype(dtype)
+
+
+def seq_attn(q, k, v, axes: M.MeshAxes, *, causal: bool = True,
+             window: int = 0):
+    """Context-parallel causal attention over the ``seq`` mesh axis.
+
+    Runs inside shard_map on the striped layout (seq-rank r holds global
+    positions r, r + p, r + 2p, ... — ``mesh.stripe_seq``; each rank's
+    causal work is balanced because its stripe spans the whole sequence).
+    Two schedules, identical results up to fp32 reassociation:
+
+      * blocking (``overlap.ring_attention`` off): one KV all-gather
+        over ``seq``, one partial pass with the gathered (non-monotone)
+        position vector;
+      * ring (on): p-1 ``ppermute`` hops circulate the KV shards —
+        after s hops this rank holds seq-rank (r - s) mod p's block
+        (``mesh.ring_perm``) — with hop s+1's permute issued BEFORE hop
+        s's partial attention, so the exchange hides under attention
+        compute exactly like the PR-1/2 ring-GEMM schedule.
+
+    Cross-hop accumulation is the fp32 (m, l, acc) online-softmax carry
+    of :func:`attn_core_partial`. p == 1 degenerates to the plain
+    :func:`attn_core` call, bit for bit."""
+    p = axes.gseq
+    if p <= 1:
+        return attn_core(q, k, v, causal=causal, window=window)
+    B, C, nq, d = q.shape
+    nkv, dv = k.shape[2], v.shape[-1]
+    r = M.axis_index(axes.seq)
+    q_pos = jnp.arange(C, dtype=jnp.int32) * p + r
+    carry = attn_partial_init(B, C, nkv, nq // nkv, dv)
+    if not axes.overlap.ring_attention:
+        kg = M.all_gather(k, axes.seq, dim=1)
+        vg = M.all_gather(v, axes.seq, dim=1)
+        # gathered index rho*C + j holds global position j*p + rho
+        i = jnp.arange(p * C, dtype=jnp.int32)
+        k_pos = (i % C) * p + i // C
+        carry = attn_core_partial(q, kg, vg, carry, q_pos=q_pos,
+                                  k_pos=k_pos, causal=causal,
+                                  window=window)
+        return attn_partial_finalize(carry, q.dtype)
+    cur_k, cur_v = k, v
+    local = jnp.arange(C, dtype=jnp.int32) * p
+    for s in range(p):
+        if s < p - 1:
+            # prefetch: hop s+1's KV permutes while hop s computes (the
+            # permute has no data dependency on this hop's partials, so
+            # the latency-hiding scheduler overlaps them)
+            nxt_k = M.ppermute_ring(cur_k, axes.seq)
+            nxt_v = M.ppermute_ring(cur_v, axes.seq)
+        owner = (r - s) % p
+        carry = attn_core_partial(q, cur_k, cur_v, carry, q_pos=q_pos,
+                                  k_pos=local + owner, causal=causal,
+                                  window=window)
+        if s < p - 1:
+            cur_k, cur_v = nxt_k, nxt_v
+    return attn_partial_finalize(carry, q.dtype)
 
 
 def decode_core_seqsharded(q, k, v, pos, axes, *, window: int = 0,
@@ -321,7 +500,12 @@ def attn_apply(p, h, cfg, axes: M.MeshAxes, *, positions, mode="train",
 
     new_cache = cache
     if mode in ("train", "prefill"):
-        out = attn_core(q, k, v, causal=causal, window=window)
+        if mode == "train" and axes.gseq > 1:
+            # context parallelism: ring/blocking partial attention over
+            # the striped seq shards (positions already carry the stripe)
+            out = seq_attn(q, k, v, axes, causal=causal, window=window)
+        else:
+            out = attn_core(q, k, v, causal=causal, window=window)
         if mode == "prefill":
             kc, vc = cache["k"], cache["v"]
             kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
@@ -381,7 +565,7 @@ def _decode_attn(q, kc, vc, ok):
                         q.reshape(B, nkv, g, d).astype(jnp.float32),
                         kc.astype(jnp.float32)) / math.sqrt(d)
     scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
+    probs = _softmax_fp32(scores)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs, vc.astype(jnp.float32))
     return out.reshape(B, 1, nq, d).astype(q.dtype)
 

@@ -262,8 +262,12 @@ class ArchConfig:
                     out.append(LayerShape(self.n_heads * m.v_dim, d,
                                           transposed=True))
                 else:
+                    # the QKV projection's kv_ring_width prices the
+                    # context-parallel KV circulation (2*kv_heads*hd
+                    # elements per token forwarded per ring hop)
                     out.append(LayerShape(
-                        d, (self.n_heads + 2 * self.n_kv_heads) * hd))
+                        d, (self.n_heads + 2 * self.n_kv_heads) * hd,
+                        kv_ring_width=2 * self.n_kv_heads * hd))
                     out.append(LayerShape(self.n_heads * hd, d,
                                           transposed=True))
             elif mixer == "mamba":
@@ -317,6 +321,19 @@ class ArchConfig:
             return f"kv heads {self.n_kv_heads} vs gy {axes.gy}"
         if self.moe and self.moe.n_experts % axes.gy:
             return f"experts {self.moe.n_experts} % gy {axes.gy}"
+        if axes.gseq > 1:
+            # context parallelism needs softmax attention everywhere:
+            # recurrent mixers (mamba/xlstm) and MLA's materialized path
+            # mix across the full sequence on-device and would silently
+            # truncate to the local shard
+            if set(self.mixers()) != {"attn"}:
+                return (f"seq axis (g_seq={axes.gseq}) needs all-attention "
+                        f"mixers, got {sorted(set(self.mixers()))}")
+            if self.arch_type in ("vlm", "audio"):
+                return (f"seq axis unsupported for arch_type "
+                        f"{self.arch_type} (contiguous-prefix inputs)")
+            if self.max_seq % axes.gseq:
+                return f"max_seq {self.max_seq} % g_seq {axes.gseq}"
         return None
 
     def validate_axes(self, axes) -> None:

@@ -222,12 +222,24 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
     (``pstream.resident`` — ``lm_loss`` does this)."""
     assert pstream is None or (mode == "train" and caches is None), \
         "zero3 param streaming is a training-path feature"
+    assert axes.gseq == 1 or mode == "train", \
+        "seq (context) parallelism is a training-path feature"
     B, T = tokens.shape
     if positions is None:
-        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
-                                     (B, T))
+        if mode == "train" and axes.gseq > 1:
+            # striped context-parallel layout (mesh.stripe_seq fed the
+            # batch): local token j on seq-rank r is global position
+            # j*g_seq + r — RoPE and causal masks both key off these
+            positions = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32) * axes.gseq
+                + M.axis_index(axes.seq), (B, T))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                         (B, T))
     h = PP.embedding_lookup(tokens, params["embed"], axes)
     if cfg.arch_type == "vlm" and image_embeds is not None:
+        assert axes.gseq == 1, \
+            "image_embeds need a contiguous token prefix (no seq sharding)"
         assert image_embeds.shape[1] <= T, \
             f"image tokens {image_embeds.shape[1]} exceed seq {T}"
         pj = params["projector"]
@@ -396,13 +408,18 @@ def lm_loss(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, labels, *,
     else:
         total = chunk_loss(h, labels)
 
-    total = PP.ar_bwd_identity(total, axes.batch_axes())
-    n_tokens_global = B * T * axes.batch_shards
+    # token_axes() == batch_axes() + seq: under context parallelism each
+    # seq-rank holds T/g_seq tokens, so the mean reduces over both.  With
+    # seq unmapped these degenerate bitwise to the old batch reductions.
+    total = PP.ar_bwd_identity(total, axes.token_axes())
+    n_tokens_global = B * T * axes.token_shards
     loss = total / n_tokens_global
-    aux_mean = PP.ar_bwd_identity(aux, axes.batch_axes()) / axes.batch_shards
+    aux_mean = PP.ar_bwd_identity(aux, axes.token_axes()) / axes.token_shards
     out_loss = loss + aux_mean
     metrics = {"xent": loss, "aux": aux_mean}
     if mtp_weight > 0.0 and "mtp" in params and T > 2:
+        assert axes.gseq == 1, \
+            "MTP needs contiguous token shifts (no seq sharding)"
         mtp = params["mtp"]
         # predict token t+2 from (h_t, emb(token_{t+1}))  [DSv3 MTP d=1]
         hn = _apply_norm(mtp["norm_h"], h[:, :-2, :], cfg, axes)
