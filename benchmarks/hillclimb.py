@@ -104,8 +104,11 @@ def build_parser():
         description="Dry-run named perf variants of an (arch x shape) "
                     "pair and log before/after roofline records.")
     ap.add_argument("--pair", required=True, help="arch:shape")
-    ap.add_argument("--variant", action="append", required=True)
-    ap.add_argument("--out", default="runs/perf/hillclimb.jsonl")
+    ap.add_argument("--variant", action="append", required=True,
+                    help="named variant to run (repeatable; see the "
+                         "module docstring for the variant catalog)")
+    ap.add_argument("--out", default="runs/perf/hillclimb.jsonl",
+                    help="JSONL log of before/after roofline records")
     ap.add_argument("--no-probe", action="store_true",
                     help="skip the depth-probe lowerings (CI smoke: the "
                          "compile proof + memory accounting only)")

@@ -58,7 +58,7 @@ def build_parser() -> argparse.ArgumentParser:
 def main() -> None:
     args = build_parser().parse_args()
 
-    from benchmarks import measured, paper_tables
+    from benchmarks import measured, paper_tables, serving
     suites = {
         "fig5": paper_tables.fig5_sweep,
         "fig7": paper_tables.fig7_unet_weak_scaling,
@@ -73,6 +73,7 @@ def main() -> None:
         "dp_sync": measured.dp_sync,
         "ring_attention": measured.ring_attention,
         "kernels": measured.kernel_micro,
+        "serving": lambda: serving.suite(calib=args.calib or ""),
         "roofline": roofline_summary,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

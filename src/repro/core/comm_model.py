@@ -314,6 +314,12 @@ class HardwareParams:
     overlap_efficiency: float = 0.8
     z_claims_first: bool = True
     cross_step_efficiency: float = 1.0
+    # HBM bandwidth (bytes/s), read ONLY by the serving-capacity model
+    # (:func:`serve_capacity` — decode is memory-bound on the KV-cache
+    # read, not FLOP-bound). No training-path prediction touches it, so
+    # its default keeps every pre-serving result bitwise (the degeneracy
+    # discipline of this docstring). v5e HBM ≈ 819 GB/s.
+    mem_bw: float = 819e9
 
 
 TPU_V5E = HardwareParams()
@@ -538,6 +544,101 @@ def predict_step_time(layers: Sequence[LayerShape], tokens: int,
                                include_data_parallel=include_data_parallel,
                                gradsync=gradsync, microbatches=microbatches)
     return out
+
+
+# ---------------------------------------------------------------------- #
+# Serving capacity (decode-time) model
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ServeCapacity:
+    """Predicted steady-state continuous-batching decode capacity.
+
+    ``step`` is one decode iteration over every layer (forward-only α-β
+    time, KV reads included in compute); ``kv_time`` is the HBM time of
+    the paged KV-cache reads alone (the memory-bound decode term);
+    ``tokens_per_s`` = batch / step.total (each iteration emits one
+    token per active slot); ``step_latency_ms`` is the per-token decode
+    latency a request observes."""
+
+    step: StepTime
+    kv_time: float
+    batch: int
+    context: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.batch / max(self.step.total, 1e-30)
+
+    @property
+    def step_latency_ms(self) -> float:
+        return self.step.total * 1e3
+
+
+def serve_layer_time(ls: LayerShape, batch: int, d: Decomposition,
+                     hw: HardwareParams = TPU_V5E, *, context: int,
+                     overlap: Optional[OverlapConfig] = None
+                     ) -> Tuple[StepTime, float]:
+    """Forward-only α-β time of one layer for a decode iteration of
+    ``batch`` single-token rows against ``context`` cached tokens.
+
+    Reuses :func:`layer_geometry` with tokens = batch (m_local = the
+    shard's active slots), so the same calibrated α/β/γ constants price
+    the collectives. Differences from :func:`layer_time`, all decode
+    facts: ONE GEMM (2·m·k·n flops, no backward); one fwd partial-output
+    all-reduce over gx (γ-dominated at decode sizes — the buffer is a
+    few KB, so the launch overhead IS the cost, which is why calibrated
+    γ matters more here than anywhere in training); one z weight
+    all-gather (batch-independent — the price of co-sharding weights
+    over z at tiny m); and a KV-read term ``m_local · context ·
+    kv_ring_width / g_y`` elements from HBM at ``hw.mem_bw`` on layers
+    that carry KV (``kv_ring_width > 0``, the QKV projection). The
+    overlap window claims z rings then activation ARs, scaled by the
+    same measured ``overlap_efficiency``."""
+    g = layer_geometry(ls, batch, d, overlap)
+    t_compute = 2.0 * g.m_local * ls.k * ls.n / (g.gx * g.gy) / hw.flops
+    t_kv = (g.m_local * context * ls.kv_ring_width / g.gy
+            * hw.bytes_per_elem / hw.mem_bw)
+    t_act = collective_time("all_reduce", g.gx, g.ar_fwd_buf, hw)
+    t_z = collective_time("all_gather", d.g_z, g.w_full_per_xy, hw)
+    window = hw.overlap_efficiency * (t_compute + t_kv)
+    want_z = overlap is not None and overlap.matmul and d.g_z > 1
+    want_ar = overlap is not None and overlap.all_reduce
+    if hw.z_claims_first:
+        hidden_z = min(t_z, window) if want_z else 0.0
+        hidden_ar = min(t_act, window - hidden_z) if want_ar else 0.0
+    else:
+        hidden_ar = min(t_act, window) if want_ar else 0.0
+        hidden_z = min(t_z, window - hidden_ar) if want_z else 0.0
+    hidden = hidden_z + hidden_ar
+    exposed = t_act + t_z - hidden
+    return (StepTime(ls.count * (t_compute + t_kv), ls.count * exposed,
+                     ls.count * hidden),
+            ls.count * t_kv)
+
+
+def serve_capacity(layers: Sequence[LayerShape], batch: int,
+                   d: Decomposition, hw: HardwareParams = TPU_V5E, *,
+                   context: int,
+                   overlap: Optional[OverlapConfig] = None
+                   ) -> ServeCapacity:
+    """Predict continuous-batching decode capacity for a mesh: the
+    serving analogue of :func:`predict_step_time` (docs/serving.md).
+
+    ``layers`` is the arch's ``comm_layers()`` list, ``batch`` the
+    engine's active slot count (tokens per decode iteration), ``context``
+    the mean cached tokens per slot (prompt + half the generation is the
+    steady-state average). Throughput ranks meshes — validated against
+    the measured open-loop benchmark via Spearman rank correlation
+    (EXPERIMENTS.md §Serving), exactly how the training model was
+    validated in fig5_measured."""
+    step, kv = ZERO_TIME, 0.0
+    for ls in layers:
+        st, k = serve_layer_time(ls, batch, d, hw, context=context,
+                                 overlap=overlap)
+        step, kv = step + st, kv + k
+    return ServeCapacity(step=step, kv_time=kv, batch=batch,
+                         context=context)
 
 
 # ---------------------------------------------------------------------- #

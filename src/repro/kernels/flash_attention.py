@@ -182,6 +182,116 @@ def flash_attention_partial(q, k, v, m, l, acc, *, causal: bool = True,
     )(q, k, v, m.astype(f32), l.astype(f32), acc.astype(f32))
 
 
+def _paged_kernel(table_ref, qlen_ref, q_ref, qpos_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, n_pages: int, page: int,
+                  window: int, scale: float):
+    """Paged variable-length decode/chunked-prefill attention.
+
+    The per-slot page table is a *scalar-prefetch* operand: it drives the
+    K/V BlockSpec index maps (physical page id = ``table[b, pi]``), so the
+    grid walks each slot's logical pages in order while the DMA engine
+    fetches from wherever the allocator put them — the vLLM pattern on
+    the PR-6 online-softmax carry. Page-slot ``pi`` of request ``b``
+    holds global key positions ``[pi*page, (pi+1)*page)``; causal masking
+    runs against the per-row global query positions ``qpos`` and rows
+    ``>= qlen[b]`` (chunk padding / idle slots) are masked entirely. A
+    fully-masked row contributes exact zeros (p is zeroed under the
+    mask), so null/stale pages never leak probability mass."""
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (T, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (page, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    T = q.shape[0]
+    iq = qpos_ref[0]                                # (T,) global q positions
+    jk = pi * page + jax.lax.broadcasted_iota(jnp.int32, (T, page), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (T, page), 0)
+    mask = (row < qlen_ref[b]) & (iq[:, None] >= jk)
+    if window > 0:
+        mask &= (iq[:, None] - jk) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] \
+        + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_attention_paged(q, k_pages, v_pages, table, q_pos, q_len, *,
+                          window: int = 0, interpret: bool = True):
+    """Paged/variable-length flash attention over a physical KV page pool.
+
+    q: (B, Hq, T, D) — T is 1 for pure decode, the chunk length for
+    chunked prefill; k_pages/v_pages: (P, Hkv, page, D) page pools;
+    table: (B, n_pages) int32 per-slot page table (page-slot p of slot b
+    lives in physical page ``table[b, p]``; unallocated slots point at
+    the reserved null page 0); q_pos: (B, T) int32 global query
+    positions; q_len: (B,) int32 valid query rows per slot.
+
+    ``table``/``q_len`` ride :class:`pltpu.PrefetchScalarGridSpec` so the
+    table gather happens in the index maps, not the kernel body. The jnp
+    oracle is ``layers.attention.paged_attn_core``; tests validate the
+    two against each other. On hardware T/page/D should be lane/sublane
+    multiples; interpret mode (the CI backend) takes any shape."""
+    B, Hq, T, D = q.shape
+    Hkv, page = k_pages.shape[1], k_pages.shape[2]
+    n_pages = table.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_paged_kernel, n_pages=n_pages, page=page,
+                             window=window, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, T, D),
+                         lambda b, h, pi, table, qlen: (b, h, 0, 0)),
+            pl.BlockSpec((1, T),
+                         lambda b, h, pi, table, qlen: (b, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, pi, table, qlen:
+                         (table[b, pi], h // g, 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, pi, table, qlen:
+                         (table[b, pi], h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, D),
+                               lambda b, h, pi, table, qlen: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q_len.astype(jnp.int32),
+      q, q_pos.astype(jnp.int32), k_pages, v_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "kv_len", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

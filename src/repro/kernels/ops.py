@@ -10,6 +10,8 @@ from repro.kernels.block_matmul import block_matmul as _bmm
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_attention import (
     flash_attention_partial as _flash_partial)
+from repro.kernels.flash_attention import (
+    flash_attention_paged as _flash_paged)
 from repro.kernels.rmsnorm import rmsnorm as _rms
 from repro.kernels.selective_scan import selective_scan as _scan
 
@@ -76,6 +78,23 @@ def flash_attention_partial(q, k, v, m, l, acc, *, causal=True, window=0,
         q_len=T0, kv_len=S0, q_pos0=q_pos0, q_stride=q_stride,
         k_pos0=k_pos0, k_stride=k_stride, interpret=interpret)
     return acc[:, :, :T0, :], m[:, :, :T0], l[:, :, :T0]
+
+
+def flash_attention_paged(q, k_pages, v_pages, table, q_pos, q_len, *,
+                          window=0, interpret=True):
+    """Paged variable-length flash attention in the MODEL's layouts:
+    q (R, T, nq, hd) row-major slots, pools (P, page, H, hd) as stored by
+    ``layers.attention.paged_attn_cache_spec``, table (R, n_pages) int32,
+    q_pos (R, T), q_len (R,). Transposes to the kernel's head-major
+    layout, runs the scalar-prefetch paged kernel, transposes back.
+    Interpret mode accepts arbitrary T/page; on hardware keep them
+    lane/sublane multiples."""
+    qk = jnp.moveaxis(q, 2, 1)               # (R, nq, T, hd)
+    kp = jnp.moveaxis(k_pages, 2, 1)         # (P, H, page, hd)
+    vp = jnp.moveaxis(v_pages, 2, 1)
+    out = _flash_paged(qk, kp, vp, table, q_pos, q_len, window=window,
+                       interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)           # (R, T, nq, hd)
 
 
 def rmsnorm(x, gamma, *, eps=1e-6, bm=256, interpret=True):

@@ -1,0 +1,24 @@
+"""Continuous-batching serving over the paged, tensor-sharded KV cache.
+
+The package splits the way a production stack does (docs/serving.md):
+
+  * :mod:`pages` — per-batch-shard physical page allocator (free list,
+    reserved null page 0);
+  * :mod:`scheduler` — request lifecycle (queued → prefill → decode →
+    done, preemption-by-recompute back to queued) and per-iteration
+    plans: which slot runs which rows at which positions against which
+    pages;
+  * :mod:`engine` — compiles the paged step (launch/steps.py
+    ``make_paged_step``) at two row widths, owns the device pools, and
+    drives the scheduler loop, measuring p50/p99 latency and tokens/s.
+
+``core.comm_model.serve_capacity`` predicts what this engine measures.
+"""
+from repro.launch.serving.pages import PageAllocator
+from repro.launch.serving.scheduler import Plan, Request, Scheduler
+from repro.launch.serving.engine import PagedEngine, ServeConfig, ServeStats
+
+__all__ = [
+    "PageAllocator", "PagedEngine", "Plan", "Request", "Scheduler",
+    "ServeConfig", "ServeStats",
+]

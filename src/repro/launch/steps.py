@@ -498,6 +498,45 @@ def make_decode_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
     return build, pspecs
 
 
+def make_paged_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
+                    dtype=jnp.bfloat16,
+                    overlap: OverlapConfig = OverlapConfig()):
+    """jitted(params, pools, tokens, positions, q_len, table) ->
+    (logits, pools) — the continuous-batching serving step over the
+    paged KV cache (launch/serving, docs/serving.md).
+
+    ``build(n_pages_global, page_size)`` returns (fn, pool_tree). Slot
+    rows shard over data x z like any batch (their page tables hold each
+    shard's LOCAL page ids); KV pools shard pages over data x z and
+    heads over y. The engine compiles the same fn at two row widths —
+    T = chunk for iterations carrying prefill work, T = 1 for pure
+    decode — both against the SAME pool buffers (donated)."""
+    axes = axes.with_overlap(overlap)
+    _, specs = init_model(cfg, axes, abstract=True, dtype=dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    bspec1 = axes.pspec(axes.batch_axes())
+    bspec2 = axes.pspec(axes.batch_axes(), None)
+
+    def step(params, pools, tokens, positions, q_len, table):
+        return D.paged_step(params, cfg, axes, tokens, pools, positions,
+                            q_len, table)
+
+    def build(n_pages_global, page_size):
+        ct = D.decoder_paged_cache_specs(cfg, axes, n_pages_global,
+                                         page_size, dtype=dtype)
+        cache_pspecs = _pspecs(ct)
+        logits_spec = axes.pspec(axes.batch_axes(), None, axes.y)
+        mapped = shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, cache_pspecs, bspec2, bspec2, bspec1,
+                      bspec2),
+            out_specs=(logits_spec, cache_pspecs),
+            check_vma=False)
+        return jax.jit(mapped, donate_argnums=(1,)), ct
+
+    return build, pspecs
+
+
 def make_prefill_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes, *,
                       dtype=jnp.bfloat16, unroll: bool = False,
                       overlap: OverlapConfig = OverlapConfig()):

@@ -267,6 +267,57 @@ def attn_partial_finalize(carry, dtype):
                                            ).astype(dtype)
 
 
+def paged_attn_core(q, k, v, *, q_pos, q_len, window: int = 0,
+                    scale: Optional[float] = None):
+    """Variable-length attention over per-slot KV gathered from page pools.
+
+    q: (R, T, nq, d) — R request slots, T rows (1 for pure decode, the
+    chunk length for chunked prefill); k/v: (R, S, nkv, dv) — slot r's
+    pages gathered in page-table order, so key index j IS global position
+    j; q_pos: (R, T) int32 global query positions; q_len: (R,) int32
+    valid query rows per slot (rows >= q_len[r] are chunk padding or idle
+    slots and are fully masked).
+
+    This is the jnp oracle the model calls in ``mode='paged'``;
+    ``kernels.flash_attention_paged`` mirrors it page-by-page and is
+    validated against it. Two properties the serving tests pin:
+
+      * masked scores contribute *exactly* zero (explicit ``where`` on p),
+        so stale data in freed/reused pages and the reserved null page
+        never leak probability mass into live rows;
+      * the reduction runs over the FIXED gathered length S in one fp32
+        softmax, so every chunking of the same prompt reduces the same
+        score vector per row — chunked prefill equals one-shot prefill
+        bitwise (tests/test_serving.py).
+
+    A fully-masked row (idle slot) yields a finite garbage output that the
+    engine discards via q_len."""
+    R, T, nq, d = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(R, T, nkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    iq = q_pos.astype(jnp.int32)[:, :, None]            # (R, T, 1)
+    jk = jnp.arange(S, dtype=jnp.int32)[None, None, :]  # (1, 1, S)
+    row = jnp.arange(T, dtype=jnp.int32)[None, :, None]
+    mask = (row < q_len.astype(jnp.int32)[:, None, None]) & (iq >= jk)
+    if window > 0:
+        mask &= (iq - jk) < window
+    mask = mask[:, None, None]                          # (R, 1, 1, T, S)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, 3, 1).reshape(R, T, nq, v.shape[-1]
+                                         ).astype(q.dtype)
+
+
 def seq_attn(q, k, v, axes: M.MeshAxes, *, causal: bool = True,
              window: int = 0):
     """Context-parallel causal attention over the ``seq`` mesh axis.
@@ -462,11 +513,16 @@ def _split_qkv(qkv, nq_l, nkv_l, hd):
 
 
 def attn_apply(p, h, cfg, axes: M.MeshAxes, *, positions, mode="train",
-               cache=None, window: int = 0, causal: bool = True):
+               cache=None, window: int = 0, causal: bool = True,
+               paged=None):
     """Returns (out, new_cache).
 
     mode: 'train' (no cache), 'prefill' (build cache), 'decode' (T==1,
-    read+update cache), 'decode_seqshard' (cache seq-sharded over data).
+    read+update cache), 'decode_seqshard' (cache seq-sharded over data),
+    'paged' (continuous-batching serving: per-slot rows at per-slot
+    positions against a pooled paged KV cache; ``paged`` carries
+    ``{"table": (R, max_pages) int32, "q_len": (R,) int32}``, see
+    docs/serving.md).
     """
     hd = cfg.head_dim or cfg.d_model // cfg.n_heads
     nq_l, nkv_l, dup = kv_layout(cfg, axes)
@@ -528,6 +584,35 @@ def attn_apply(p, h, cfg, axes: M.MeshAxes, *, positions, mode="train",
         if window > 0:
             ok &= (idx - jk) < window
         out = _decode_attn(q, kc, vc, ok)
+    elif mode == "paged":
+        # continuous-batching serving (docs/serving.md): the cache is a
+        # physical page pool (P_local, page, H_local, hd); each slot's
+        # logical sequence lives wherever its page table says. Rows are
+        # per-slot chunk tokens (prefill) or single decode tokens at
+        # per-slot global positions — no uniform-position assumption.
+        kp, vp = cache["k"], cache["v"]
+        page = kp.shape[1]
+        table = paged["table"].astype(jnp.int32)        # (R, max_pages)
+        q_len = paged["q_len"].astype(jnp.int32)        # (R,)
+        R, Tr = positions.shape
+        valid = jnp.arange(Tr, dtype=jnp.int32)[None, :] < q_len[:, None]
+        slot_pages = jnp.clip(positions.astype(jnp.int32) // page, 0,
+                              table.shape[1] - 1)
+        pid = jnp.take_along_axis(table, slot_pages, axis=1)
+        # invalid rows (chunk padding / idle slots) collapse onto the
+        # reserved null page 0 at offset 0 — written, never read (the
+        # allocator never hands out page 0 and masked rows zero p)
+        pid = jnp.where(valid, pid, 0)
+        off = jnp.where(valid, positions.astype(jnp.int32) % page, 0)
+        kp = kp.at[pid, off].set(k.astype(kp.dtype))
+        vp = vp.at[pid, off].set(v.astype(vp.dtype))
+        new_cache = {"k": kp, "v": vp}
+        # gather each slot's pages in table order: key index j of the
+        # gathered (R, S_max, ...) view IS global position j
+        kc = kp[table].reshape(R, -1, *kp.shape[2:])
+        vc = vp[table].reshape(R, -1, *vp.shape[2:])
+        out = paged_attn_core(q, kc, vc, q_pos=positions, q_len=q_len,
+                              window=window)
     elif mode == "decode_seqshard":
         # global_batch=1 long-context: cache seq dim sharded over data; the
         # fresh token's kv is written by the owning shard only.
@@ -584,6 +669,26 @@ def attn_cache_spec(cfg, axes: M.MeshAxes, batch_global, seq, *,
     else:
         spec = axes.pspec(axes.batch_axes(), None, axes.y, None)
     shape = (batch_global, seq, heads_global, hd)
+    return {"k": (jax.ShapeDtypeStruct(shape, dtype), spec),
+            "v": (jax.ShapeDtypeStruct(shape, dtype), spec)}
+
+
+def paged_attn_cache_spec(cfg, axes: M.MeshAxes, n_pages_global, page_size,
+                          *, dtype=jnp.bfloat16):
+    """GLOBAL (struct, spec) for this layer's paged KV pool.
+
+    Shape (n_pages_global, page_size, heads_global, hd): physical pages
+    shard over the batch axes (data x z, the same rule as the dense decode
+    cache — z co-shards batch storage per the paper), KV heads over y,
+    replicated over x (x shards the residual stream, not the cache). Each
+    batch shard owns n_pages_global / (g_data*g_z) contiguous pages whose
+    page tables hold shard-LOCAL ids; page 0 of every shard is the
+    reserved null page (docs/serving.md)."""
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    _, _, dup = kv_layout(cfg, axes)
+    heads_global = axes.gy if dup else cfg.n_kv_heads
+    spec = axes.pspec(axes.batch_axes(), None, axes.y, None)
+    shape = (n_pages_global, page_size, heads_global, hd)
     return {"k": (jax.ShapeDtypeStruct(shape, dtype), spec),
             "v": (jax.ShapeDtypeStruct(shape, dtype), spec)}
 

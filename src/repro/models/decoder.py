@@ -159,16 +159,18 @@ def decoder_init(key, cfg: ArchConfig, axes: M.MeshAxes, *,
 # ---------------------------------------------------------------------- #
 
 def _block_apply(blk, kinds_i, h, cfg, axes, *, positions, mode, cache,
-                 aux):
+                 aux, paged=None):
     mixer, ffn = kinds_i
     # seq-sharded decode only changes the attention cache layout; the
     # recurrent mixers always do a plain single-step state update.
+    # (mode 'paged' reaches softmax-attention mixers only —
+    # decoder_paged_cache_specs gates the architecture up front.)
     sub_mode = "decode" if mode.startswith("decode") else mode
     hn = _apply_norm(blk["norm1"], h, cfg, axes)
     if mixer == "attn":
         o, cache = A.attn_apply(blk["mixer"], hn, cfg, axes,
                                 positions=positions, mode=mode, cache=cache,
-                                window=cfg.sliding_window)
+                                window=cfg.sliding_window, paged=paged)
     elif mixer == "mla":
         o, cache = A.mla_apply(blk["mixer"], hn, cfg, axes,
                                positions=positions, mode=sub_mode,
@@ -208,7 +210,7 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
                    positions=None, mode: str = "train", caches=None,
                    image_embeds=None, remat: bool = True,
                    unroll: bool = False, remat_policy: str = "full",
-                   pstream=None):
+                   pstream=None, paged=None):
     """Run embedding + all blocks. Returns (h, new_caches, aux_loss).
 
     ``pstream`` (a ``gradsync.ParamStreamer``, zero3 training only)
@@ -222,8 +224,14 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
     (``pstream.resident`` — ``lm_loss`` does this)."""
     assert pstream is None or (mode == "train" and caches is None), \
         "zero3 param streaming is a training-path feature"
-    assert axes.gseq == 1 or mode == "train", \
-        "seq (context) parallelism is a training-path feature"
+    if axes.gseq > 1 and mode != "train":
+        raise NotImplementedError(
+            f"seq (context) parallelism is a training-path feature: the "
+            f"{mode!r} path keeps its KV cache whole per batch shard, so "
+            f"a seq axis of g_seq={axes.gseq} has nothing to shard "
+            f"(ROADMAP residual 'seq-parallel serving'). Serve on a mesh "
+            f"with g_seq == 1 — e.g. pass a 4-tuple --mesh d,x,y,z, or "
+            f"drop --seq-parallel/--g-seq from the launch flags.")
     B, T = tokens.shape
     if positions is None:
         if mode == "train" and axes.gseq > 1:
@@ -257,7 +265,8 @@ def decoder_hidden(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, *,
                 c = None if blk_caches is None else blk_caches[f"pos{i}"]
                 h, c, aux = _block_apply(
                     blk_params[f"pos{i}"], kinds[i], h, cfg, axes,
-                    positions=positions, mode=mode, cache=c, aux=aux)
+                    positions=positions, mode=mode, cache=c, aux=aux,
+                    paged=paged)
                 new_caches[f"pos{i}"] = c
             return h, aux, new_caches
         return period_fn
@@ -496,6 +505,63 @@ def decode_step(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, caches,
                                       unroll=unroll)
     logits = lm_logits(params, cfg, axes, h)
     return logits, new_caches
+
+
+def decoder_paged_cache_specs(cfg: ArchConfig, axes: M.MeshAxes,
+                              n_pages_global: int, page_size: int, *,
+                              dtype=jnp.bfloat16):
+    """GLOBAL (struct, spec) trees for the PAGED serving cache: one
+    physical KV page pool per attention layer (pages sharded over
+    data x z, KV heads over y — ``A.paged_attn_cache_spec``), stacked
+    (n_periods, ...) per segment position like ``decoder_cache_specs``.
+
+    Paged serving gates to text decoders whose mixers are all softmax
+    attention: recurrent mixers (mamba/xlstm) keep per-slot dense state
+    with no page analogue, and MLA's absorbed decode reads its compressed
+    cache contiguously."""
+    bad = sorted({m for m in cfg.mixers() if m != "attn"})
+    if bad or cfg.arch_type in ("vlm", "audio"):
+        what = (f"mixer(s) {bad}" if bad
+                else f"arch_type {cfg.arch_type!r}")
+        raise NotImplementedError(
+            f"{cfg.name}: paged continuous-batching serving supports "
+            f"text decoders with softmax-attention mixers only (got "
+            f"{what}). Use the fixed-batch path instead: "
+            f"python -m repro.launch.serve --mode fixed --arch {cfg.name}")
+    out = {}
+    for s, (kinds, n_periods) in enumerate(cfg.segments()):
+        seg = {}
+        for i, _ in enumerate(kinds):
+            spec = A.paged_attn_cache_spec(cfg, axes, n_pages_global,
+                                           page_size, dtype=dtype)
+            seg[f"pos{i}"] = jax.tree.map(
+                lambda sp: (jax.ShapeDtypeStruct(
+                    (n_periods, *sp[0].shape), sp[0].dtype),
+                    P(None, *sp[1])),
+                spec, is_leaf=lambda t: isinstance(t, tuple)
+                and len(t) == 2 and isinstance(t[0], jax.ShapeDtypeStruct))
+        out[f"seg{s}"] = seg
+    return out
+
+
+def paged_step(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, pools,
+               positions, q_len, table):
+    """One continuous-batching serving step over the paged KV cache.
+
+    tokens (R, T): slot r's rows 0..q_len[r]-1 carry its prefill chunk
+    (or single decode token) at global ``positions`` (R, T); rows past
+    q_len[r] are padding (idle slots have q_len 0). ``table`` (R,
+    max_pages) holds shard-local physical page ids. Returns (per-slot
+    next-token logits from the last *valid* row, (R, 1, V/y), new
+    pools). See docs/serving.md for the schedule this slots into."""
+    paged = {"table": table, "q_len": q_len}
+    h, new_pools, _ = decoder_hidden(params, cfg, axes, tokens,
+                                     positions=positions, mode="paged",
+                                     caches=pools, remat=False, paged=paged)
+    idx = jnp.clip(q_len.astype(jnp.int32) - 1, 0, tokens.shape[1] - 1)
+    hl = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = lm_logits(params, cfg, axes, hl)
+    return logits, new_pools
 
 
 def prefill(params, cfg: ArchConfig, axes: M.MeshAxes, tokens, caches, *,

@@ -1,0 +1,394 @@
+"""Serving stack: paged KV cache, continuous-batching scheduler, engine.
+
+The load-bearing guarantees (docs/serving.md):
+
+  * paged decode is TOKEN-identical to dense prefill+decode (greedy ids
+    match; logits agree to fp tolerance — online softmax reassociates);
+  * chunked prefill is BITWISE identical to one-shot prefill (the paged
+    core reduces over the fixed gathered length in one fp32 softmax);
+  * the page allocator holds conservation/no-alias invariants under
+    admit/evict churn, and preemption-by-recompute never corrupts
+    output tokens;
+  * serving gates raise actionable errors (seq-parallel meshes,
+    non-attention mixers) instead of silently wrong results.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import N_DEVICES
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+ARCH = "h2o-danube-3-4b"   # llama-style all-attention GQA decoder
+
+
+# ---------------------------------------------------------------------- #
+# kernel level: paged flash attention vs the jnp paged core
+# ---------------------------------------------------------------------- #
+
+def test_paged_kernel_matches_core():
+    from repro.kernels import ops
+    from repro.layers.attention import paged_attn_core
+
+    rng = np.random.RandomState(0)
+    R, T, Hq, Hkv, D = 3, 4, 4, 2, 8
+    page, n_pages_tab, P = 4, 3, 16
+    q = jnp.asarray(rng.randn(R, T, Hq, D), jnp.float32)
+    kp = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    vp = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    table = jnp.asarray(rng.randint(1, P, (R, n_pages_tab)), jnp.int32)
+    q_pos = jnp.asarray(rng.randint(0, page * n_pages_tab, (R, T)),
+                        jnp.int32)
+    q_len = jnp.asarray([T, 2, 0], jnp.int32)
+
+    out_k = ops.flash_attention_paged(q, kp, vp, table, q_pos, q_len)
+    # core consumes the gathered pages: (R, S, Hkv, D)
+    kc = kp[table].reshape(R, -1, Hkv, D)
+    vc = vp[table].reshape(R, -1, Hkv, D)
+    out_c = paged_attn_core(q.transpose(0, 1, 2, 3), kc, vc,
+                            q_pos=q_pos, q_len=q_len)
+    rows = np.arange(T)[None, :] < np.asarray(q_len)[:, None]
+    np.testing.assert_allclose(np.asarray(out_k)[rows],
+                               np.asarray(out_c)[rows],
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_core_chunk_invariance_is_bitwise():
+    """Any chunking of the query rows reduces the same fixed-length score
+    vector per row -> identical fp ops -> bitwise-equal outputs."""
+    from repro.layers.attention import paged_attn_core
+
+    rng = np.random.RandomState(1)
+    R, T, Hq, Hkv, D, S = 2, 8, 4, 2, 8, 16
+    q = jnp.asarray(rng.randn(R, T, Hq, D), jnp.float32)
+    k = jnp.asarray(rng.randn(R, S, Hkv, D), jnp.float32)
+    v = jnp.asarray(rng.randn(R, S, Hkv, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (R, T))
+    full = paged_attn_core(q, k, v, q_pos=pos,
+                           q_len=jnp.full((R,), T, jnp.int32))
+    for c0, c1 in ((0, 3), (3, T)):
+        part = paged_attn_core(
+            q[:, c0:c1], k, v, q_pos=pos[:, c0:c1],
+            q_len=jnp.full((R,), c1 - c0, jnp.int32))
+        assert np.array_equal(np.asarray(part),
+                              np.asarray(full)[:, c0:c1])
+
+
+# ---------------------------------------------------------------------- #
+# allocator invariants
+# ---------------------------------------------------------------------- #
+
+def test_page_allocator_invariants_and_errors():
+    from repro.launch.serving import PageAllocator
+
+    with pytest.raises(ValueError):
+        PageAllocator(1)            # no allocatable page beside the null
+
+    a = PageAllocator(8)
+    assert a.n_free == 7
+    got = [a.alloc() for _ in range(7)]
+    assert 0 not in got and sorted(got) == list(range(1, 8))
+    assert a.alloc() is None        # exhausted -> None, never an exception
+    a.check()
+    a.free(got[:3])
+    a.check()
+    with pytest.raises(ValueError):
+        a.free([got[0]])            # double free
+    with pytest.raises(ValueError):
+        a.free([0])                 # the null page is never allocated
+    a.free(got[3:])
+    a.check()
+    assert a.n_used == 0 and a.n_free == 7
+
+
+def test_page_allocator_churn():
+    from repro.launch.serving import PageAllocator
+
+    rng = np.random.RandomState(2)
+    a = PageAllocator(32)
+    held = []
+    for _ in range(500):
+        if held and rng.rand() < 0.45:
+            k = rng.randint(1, len(held) + 1)
+            batch = [held.pop() for _ in range(k)]
+            a.free(batch)
+        else:
+            p = a.alloc()
+            if p is not None:
+                held.append(p)
+        a.check()
+        assert a.n_used == len(held)
+    a.free(held)
+    a.check()
+    assert a.n_used == 0
+
+
+# ---------------------------------------------------------------------- #
+# full-stack parity: paged vs dense, chunked vs one-shot
+# ---------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def served_model(mesh4, axes4):
+    from repro.configs import get_config
+    from repro.core.partition import spec_tree_to_pspecs
+    from repro.launch import steps as ST
+
+    cfg = get_config(ARCH).reduced()
+    params, specs = ST.init_model(cfg, axes4, jax.random.PRNGKey(0),
+                                  dtype=jnp.float32)
+    params = ST.device_put_tree(mesh4, params,
+                                spec_tree_to_pspecs(specs))
+    return cfg, params
+
+
+def _dense_greedy(cfg, mesh, axes, params, prompts, gen):
+    """Reference ids: rectangular prefill + lockstep dense decode."""
+    from repro.launch import steps as ST
+    B, L = prompts.shape
+    S_max = L + gen
+    pre_build, _ = ST.make_prefill_step(cfg, mesh, axes,
+                                        dtype=jnp.float32)
+    pre_fn, _, ct = pre_build(B, L, S_max)
+    dec_build, _ = ST.make_decode_step(cfg, mesh, axes,
+                                       dtype=jnp.float32)
+    dec_fn, _ = dec_build(B, S_max)
+    caches = ST.zeros_caches(mesh, ct)
+    logits, caches = pre_fn(params, caches, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    ids = [np.asarray(tok)]
+    for i in range(gen - 1):
+        logits, caches = dec_fn(params, caches, tok[:, None],
+                                jnp.int32(L + i))
+        tok = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        ids.append(np.asarray(tok))
+    return np.stack(ids, axis=1)
+
+
+def _paged_setup(cfg, mesh, axes, *, slots, page_size, max_pages):
+    from repro.launch import steps as ST
+    shards = axes.batch_shards
+    pages_per_shard = 1 + (slots // shards) * max_pages
+    build, _ = ST.make_paged_step(cfg, mesh, axes, dtype=jnp.float32)
+    step_fn, ct = build(shards * pages_per_shard, page_size)
+    pools = ST.zeros_caches(mesh, ct)
+    # deterministic striped tables: slot r owns max_pages consecutive
+    # shard-local pages starting after the null page
+    slots_per_shard = slots // shards
+    table = np.zeros((slots, max_pages), np.int32)
+    for r in range(slots):
+        for p in range(max_pages):
+            table[r, p] = 1 + (r % slots_per_shard) * max_pages + p
+    return step_fn, pools, jnp.asarray(table)
+
+
+def _paged_greedy(cfg, mesh, axes, params, prompts, gen, *,
+                  chunk, page_size):
+    slots, L = prompts.shape
+    max_pages = -(-(L + gen) // page_size)
+    step_fn, pools, table = _paged_setup(
+        cfg, mesh, axes, slots=slots, page_size=page_size,
+        max_pages=max_pages)
+    ids = []
+    # chunked prefill
+    pos = 0
+    while pos < L:
+        cl = min(chunk, L - pos)
+        tokens = np.zeros((slots, chunk), np.int32)
+        tokens[:, :cl] = prompts[:, pos:pos + cl]
+        positions = pos + np.arange(chunk, dtype=np.int32)[None, :]
+        q_len = np.full((slots,), cl, np.int32)
+        logits, pools = step_fn(params, pools, jnp.asarray(tokens),
+                                jnp.asarray(np.broadcast_to(
+                                    positions, (slots, chunk))),
+                                jnp.asarray(q_len), table)
+        pos += cl
+    tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+    ids.append(tok)
+    # decode
+    for i in range(gen - 1):
+        positions = np.full((slots, 1), L + i, np.int32)
+        logits, pools = step_fn(params, pools,
+                                jnp.asarray(tok[:, None]),
+                                jnp.asarray(positions),
+                                jnp.asarray(np.ones((slots,), np.int32)),
+                                table)
+        tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        ids.append(tok)
+    return np.stack(ids, axis=1), logits
+
+
+def test_paged_decode_token_parity_with_dense(mesh4, axes4, served_model):
+    cfg, params = served_model
+    B, L, GEN = 4, 8, 6
+    rng = np.random.RandomState(3)
+    prompts = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, L)),
+                          jnp.int32)
+    dense = _dense_greedy(cfg, mesh4, axes4, params, prompts, GEN)
+    paged, _ = _paged_greedy(cfg, mesh4, axes4, params,
+                             np.asarray(prompts), GEN,
+                             chunk=4, page_size=4)
+    assert np.array_equal(dense, paged), (dense, paged)
+
+
+def test_chunked_prefill_bitwise_equals_oneshot(mesh4, axes4,
+                                                served_model):
+    cfg, params = served_model
+    B, L, GEN = 4, 8, 2
+    rng = np.random.RandomState(4)
+    prompts = rng.randint(1, cfg.vocab_size, (B, L)).astype(np.int32)
+    _, logits_chunked = _paged_greedy(cfg, mesh4, axes4, params, prompts,
+                                      GEN, chunk=4, page_size=4)
+    _, logits_oneshot = _paged_greedy(cfg, mesh4, axes4, params, prompts,
+                                      GEN, chunk=L, page_size=4)
+    assert np.array_equal(np.asarray(logits_chunked),
+                          np.asarray(logits_oneshot))
+
+
+# ---------------------------------------------------------------------- #
+# scheduler + engine
+# ---------------------------------------------------------------------- #
+
+def _virtual_clock():
+    """Deterministic time source: each call advances 1 ms."""
+    state = {"t": 0.0}
+
+    def tick():
+        state["t"] += 1e-3
+        return state["t"]
+    return tick
+
+
+@pytest.fixture(scope="module")
+def engine_factory(mesh4, axes4, served_model):
+    from repro.launch.serving import PagedEngine, ServeConfig
+    cfg, params = served_model
+
+    def make(**kw):
+        scfg = ServeConfig(**kw)
+        return PagedEngine(cfg, mesh4, axes4, params, scfg,
+                           dtype=jnp.float32), cfg
+    return make
+
+
+def test_engine_closed_loop_completion(engine_factory):
+    from repro.launch.serving import Request
+    engine, cfg = engine_factory(slots=8, page_size=4,
+                                 pages_per_shard=24, chunk=8)
+    engine.warmup()
+    rng = np.random.RandomState(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(1, cfg.vocab_size,
+                                       size=(6,)).astype(np.int32),
+                    max_new=int(rng.randint(2, 7)),
+                    arrival=0.002 * i)
+            for i in range(12)]
+    stats = engine.run(reqs, time_fn=_virtual_clock())
+    assert stats.n_requests == 12
+    for r in reqs:
+        assert r.state == "done"
+        assert len(r.generated) == r.max_new
+        assert r.t_done >= r.t_first >= 0
+    assert stats.total_new_tokens == sum(r.max_new for r in reqs)
+    assert np.isfinite([stats.latency_p50_ms, stats.latency_p99_ms,
+                        stats.ttft_p50_ms, stats.ttft_p99_ms]).all()
+    for a in engine.sched.allocators:
+        a.check()
+        assert a.n_used == 0, "pages leaked after drain"
+
+
+def test_engine_preemption_churn_keeps_tokens_correct(engine_factory,
+                                                      mesh4, axes4,
+                                                      served_model):
+    """A page pool too small for the offered load forces recompute
+    preemptions; generated ids must still match the dense reference."""
+    from repro.launch.serving import Request
+    cfg, params = served_model
+    # 7 allocatable pages/shard, page 4 -> at most ~2 requests resident
+    engine, _ = engine_factory(slots=8, page_size=4,
+                               pages_per_shard=8, chunk=8)
+    engine.warmup()
+    rng = np.random.RandomState(6)
+    L, GEN = 6, 4
+    prompts = rng.randint(1, cfg.vocab_size, (8, L)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=GEN)
+            for i in range(8)]
+    stats = engine.run(reqs, time_fn=_virtual_clock())
+    assert stats.n_preemptions > 0, "pool was sized to force preemption"
+    dense = _dense_greedy(cfg, mesh4, axes4, params,
+                          jnp.asarray(prompts), GEN)
+    for i, r in enumerate(reqs):
+        assert r.generated == list(dense[i]), (
+            f"rid={i} preemptions={r.preemptions}")
+    for a in engine.sched.allocators:
+        a.check()
+        assert a.n_used == 0
+
+
+def test_scheduler_rejects_oversized_request():
+    from repro.launch.serving import PageAllocator, Request, Scheduler
+    s = Scheduler(n_slots=2, page_size=4, max_pages=3,
+                  allocators=[PageAllocator(4)])
+    with pytest.raises(ValueError):
+        s.submit(Request(rid=0, prompt=np.zeros((10,), np.int32),
+                         max_new=8))     # 18 > 3*4
+
+
+# ---------------------------------------------------------------------- #
+# capacity model + gates
+# ---------------------------------------------------------------------- #
+
+def test_serve_capacity_sanity():
+    from repro.configs import get_config
+    from repro.core import comm_model as CM
+
+    layers = list(get_config(ARCH).reduced().comm_layers())
+    d = CM.Decomposition(2, 2, 2, 1)
+    cap = CM.serve_capacity(layers, 8, d, context=128)
+    assert cap.tokens_per_s > 0 and cap.step_latency_ms > 0
+    # more resident context -> more KV bytes to stream -> slower step
+    cap_long = CM.serve_capacity(layers, 8, d, context=4096)
+    assert cap_long.step.total > cap.step.total
+    # degeneracy: the serving-only mem_bw field must not perturb the
+    # training-path hardware defaults
+    assert CM.HardwareParams().mem_bw == CM.TPU_V5E.mem_bw
+
+
+def test_paged_cache_specs_gate_non_attention():
+    from repro.configs import get_config
+    from repro.launch import mesh as LM
+    from repro.models import decoder as D
+
+    mesh = LM.make_smoke_mesh((1, 2, 2, 1) if N_DEVICES < 8
+                              else (2, 2, 2, 1))
+    axes = LM.bind_4d(mesh)
+    cfg = get_config("jamba-v0.1-52b").reduced()   # mamba mixers
+    with pytest.raises(NotImplementedError, match="--mode fixed"):
+        D.decoder_paged_cache_specs(cfg, axes, 16, 4)
+
+
+@pytest.mark.skipif(N_DEVICES < 8, reason="needs a g_seq > 1 mesh")
+def test_serving_gseq_gate_is_actionable():
+    from repro.configs import get_config
+    from repro.launch import mesh as LM
+    from repro.models import decoder as D
+
+    mesh = LM.make_smoke_mesh((1, 2, 2, 1, 2),
+                              ("data", "x", "y", "z", "seq"))
+    axes = LM.bind_4d(mesh)
+    cfg = get_config(ARCH).reduced()
+    with pytest.raises(NotImplementedError, match="g_seq == 1"):
+        D.decoder_hidden({}, cfg, axes,
+                         np.zeros((1, 1), np.int32), mode="paged")
+
+
+def test_engine_rejects_unshardable_slots(mesh4, axes4, served_model):
+    from repro.launch.serving import PagedEngine, ServeConfig
+    cfg, params = served_model
+    if axes4.batch_shards == 1:
+        pytest.skip("needs > 1 batch shard to misalign slots")
+    with pytest.raises(ValueError, match="multiple of the batch"):
+        PagedEngine(cfg, mesh4, axes4, params,
+                    ServeConfig(slots=axes4.batch_shards + 1))
