@@ -84,6 +84,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="hardware calibration profile (path or 'auto'; "
                          "benchmarks.calibrate) pricing the "
                          "serve_capacity predictions")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-step scheduler counters as JSONL under "
+                         "runs/telemetry/serving-<mesh>.jsonl; the JSONL "
+                         "summary carries the engine's tokens/s so it "
+                         "agrees with --out by construction")
     ap.add_argument("--out", default="runs/perf/serving.csv",
                     help="per-mesh results CSV path")
     return ap
@@ -209,14 +214,35 @@ def run_fixed_baseline(cfg, mesh, axes, params, reqs, args):
                       n_preemptions=0)
 
 
-def run_continuous(cfg, mesh, axes, params, reqs, args):
+def run_continuous(cfg, mesh, axes, params, reqs, args, mesh_name=""):
     from repro.launch.serving import PagedEngine, ServeConfig
     scfg = ServeConfig(slots=args.slots, page_size=args.page_size,
                        pages_per_shard=args.pages, chunk=args.chunk)
     engine = PagedEngine(cfg, mesh, axes, params, scfg,
                          dtype=jnp.float32)
     engine.warmup()
-    stats = engine.run(reqs)
+    telem = None
+    if getattr(args, "telemetry", False):
+        from repro.core import comm_model as CM
+        from repro.launch import telemetry as TL
+        telem = TL.Telemetry(
+            f"serving-{mesh_name or 'mesh'}",
+            flops_per_token=CM.model_flops_per_token(cfg, "serve"),
+            peak_flops_per_device=CM.TPU_V5E.flops,
+            n_devices=int(mesh.devices.size), verbose=False,
+            meta={"arch": cfg.name, "mesh": mesh_name,
+                  "slots": args.slots, "pages": args.pages,
+                  "rate": args.rate})
+    stats = engine.run(reqs, telemetry=telem)
+    if telem is not None:
+        # the CSV row and the JSONL summary must quote the SAME number:
+        # both take tokens/s from the engine's open-loop wall clock
+        telem.close(extra={
+            "tok_s": stats.tokens_per_s, "wall_s": stats.wall_s,
+            "steps": stats.n_steps, "tokens": stats.total_new_tokens,
+            "preemptions": stats.n_preemptions,
+            "ttft_p50_ms": stats.ttft_p50_ms,
+            "ttft_p99_ms": stats.ttft_p99_ms})
     for alloc in engine.sched.allocators:
         alloc.check()
         assert alloc.n_used == 0, "pages leaked after drain"
@@ -261,7 +287,8 @@ def suite(calib: str = "", args=None) -> List[Tuple[str, float, str]]:
         fixed_reqs = _fresh(base)
         cont_reqs = _fresh(base)
         fx = run_fixed_baseline(cfg, mesh, axes, params, fixed_reqs, args)
-        ct = run_continuous(cfg, mesh, axes, params, cont_reqs, args)
+        ct = run_continuous(cfg, mesh, axes, params, cont_reqs, args,
+                            mesh_name=name)
 
         # paged-vs-dense token parity: greedy ids must agree per request
         for rf, rc in zip(fixed_reqs, cont_reqs):

@@ -255,6 +255,29 @@ def resolve_hw(spec: Optional[str]) -> CM.HardwareParams:
     return prof.hardware_params() if prof is not None else CM.TPU_V5E
 
 
+def merge_drift(profile: CalibrationProfile, record: Dict
+                ) -> CalibrationProfile:
+    """Fold a telemetry drift record (``launch.telemetry.DriftMonitor
+    .record()``) into the profile's ``probes``.
+
+    Keyed per workload (``drift:<workload>``) so each (arch, mesh) run
+    overwrites its own entry while ``drift_ratio`` tracks the latest
+    aggregate. The fitted α/β/γ constants are deliberately NOT rescaled
+    here — a drifting end-to-end ratio says the model is wrong for this
+    workload, not which constant is wrong; the recorded ratio is the
+    evidence a recalibration (benchmarks.calibrate) acts on, and readers
+    of the JSON (dryrun/hillclimb) can surface it next to predictions."""
+    for field in ("ratio", "predicted_s", "n"):
+        if field not in record:
+            raise ValueError(f"drift record missing {field!r}: {record}")
+    probes = dict(profile.probes)
+    key = str(record.get("workload") or "step")
+    probes[f"drift:{key}"] = float(record["ratio"])
+    probes["drift_ratio"] = float(record["ratio"])
+    probes["drift_n"] = float(record["n"])
+    return dataclasses.replace(profile, probes=probes)
+
+
 # ---------------------------------------------------------------------- #
 # Microbenchmark harness (host-backend timings; needs >= 2 devices)
 # ---------------------------------------------------------------------- #

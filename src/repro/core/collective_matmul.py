@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import trace
 from repro.core.mesh import flat_ring_axis, flat_ring_index, \
     ring_all_gather, ring_perm as _ring_perm
 
@@ -103,19 +104,21 @@ def ring_place(block, name: AxisRef, mm: Callable, *, gdim: int,
     out = None
     piece_w = 0
     for s in range(p):
-        j = (idx - s) % p
-        nxt: List = []
-        for q, cur in enumerate(curs):
-            y = mm(cur)
-            if out is None:
-                piece_w = y.shape[-1]
-                out = jnp.zeros(y.shape[:-1] + (p * chunks * piece_w,),
-                                y.dtype)
-            out = lax.dynamic_update_slice_in_dim(
-                out, y, (j * chunks + q) * piece_w, axis=-1)
-            if s < p - 1:
-                nxt.append(lax.ppermute(cur, axn, perm))
-        curs = nxt
+        with trace.scope("ring_ag", name, f"hop{s}"):
+            j = (idx - s) % p
+            nxt: List = []
+            for q, cur in enumerate(curs):
+                with trace.scope("gemm", None, f"chunk{q}"):
+                    y = mm(cur)
+                if out is None:
+                    piece_w = y.shape[-1]
+                    out = jnp.zeros(y.shape[:-1] + (p * chunks * piece_w,),
+                                    y.dtype)
+                out = lax.dynamic_update_slice_in_dim(
+                    out, y, (j * chunks + q) * piece_w, axis=-1)
+                if s < p - 1:
+                    nxt.append(lax.ppermute(cur, axn, perm))
+            curs = nxt
     return out
 
 
@@ -141,16 +144,18 @@ def ring_accumulate(lhs, block, name: AxisRef, mm: Callable, *, gdim: int,
             for q in range(chunks)]
     acc = None
     for s in range(p):
-        j = (idx - s) % p
-        nxt: List = []
-        for q, cur in enumerate(curs):
-            seg = lax.dynamic_slice_in_dim(
-                lhs, (j * chunks + q) * m_l, m_l, axis=ldim)
-            y = mm(seg, cur)
-            acc = y if acc is None else acc + y
-            if s < p - 1:
-                nxt.append(lax.ppermute(cur, axn, perm))
-        curs = nxt
+        with trace.scope("ring_ag", name, f"hop{s}"):
+            j = (idx - s) % p
+            nxt: List = []
+            for q, cur in enumerate(curs):
+                seg = lax.dynamic_slice_in_dim(
+                    lhs, (j * chunks + q) * m_l, m_l, axis=ldim)
+                with trace.scope("gemm", None, f"chunk{q}"):
+                    y = mm(seg, cur)
+                acc = y if acc is None else acc + y
+                if s < p - 1:
+                    nxt.append(lax.ppermute(cur, axn, perm))
+            curs = nxt
     return acc
 
 
@@ -176,12 +181,15 @@ def ring_reduce_scatter_mm(name: AxisRef, mm: Callable, *, block_w: int,
     for q in range(chunks):
         recv = None
         for s in range(1, p):
-            j = (idx - s) % p
-            g = mm(j * block_w + q * m, m)
-            part = g if recv is None else recv + g
-            recv = lax.ppermute(part, axn, perm)
-        g = mm(idx * block_w + q * m, m)
-        outs.append(g if recv is None else recv + g)
+            with trace.scope("ring_rs", name, f"hop{s - 1}"):
+                j = (idx - s) % p
+                with trace.scope("gemm", None, f"chunk{q}"):
+                    g = mm(j * block_w + q * m, m)
+                part = g if recv is None else recv + g
+                recv = lax.ppermute(part, axn, perm)
+        with trace.scope("ring_rs", name, "local"):
+            g = mm(idx * block_w + q * m, m)
+            outs.append(g if recv is None else recv + g)
     return outs[0] if chunks == 1 else jnp.concatenate(outs, axis=-1)
 
 
@@ -206,13 +214,15 @@ def ring_all_reduce_mm(name: AxisRef, mm: Callable, *, out_w: int,
     if p == 1:
         return mm(jnp.int32(0), out_w).astype(dtype)
     if p == 2:
-        y = mm(jnp.int32(0), out_w).astype(dtype)
-        return y + lax.ppermute(y, axn, _ring_perm(2))
+        with trace.scope("ring_ar", name, "exchange"):
+            y = mm(jnp.int32(0), out_w).astype(dtype)
+            return y + lax.ppermute(y, axn, _ring_perm(2))
     if out_w % p:
         return jax.lax.psum(mm(jnp.int32(0), out_w).astype(dtype), name)
-    scat = ring_reduce_scatter_mm(name, mm, block_w=out_w // p,
-                                  chunks=chunks).astype(dtype)
-    return ring_all_gather(scat, name, dim=-1)
+    with trace.scope("ring_ar", name):
+        scat = ring_reduce_scatter_mm(name, mm, block_w=out_w // p,
+                                      chunks=chunks).astype(dtype)
+        return ring_all_gather(scat, name, dim=-1)
 
 
 # ---------------------------------------------------------------------- #

@@ -243,6 +243,22 @@ def model_volume(layers: Sequence[LayerShape], tokens: int, d: Decomposition,
     return sum(layer_volume(ls, tokens, d, **kw) for ls in layers)
 
 
+def model_flops_per_token(cfg, mode: str = "train") -> float:
+    """Model FLOPs one token costs: ``2 * N_active`` per forward pass
+    (one multiply + one add per active parameter), tripled for training
+    (forward + the two backward GEMMs per forward GEMM). MoE counts only
+    the routed top-k + shared experts (``cfg.active_param_count``).
+
+    Single source for both ``roofline.model_flops_per_device`` (HLO
+    useful-flop ratio) and the telemetry MFU
+    (``launch/telemetry.Telemetry``); tests/test_telemetry.py
+    cross-checks the two against a hand-counted config."""
+    if mode not in ("train", "serve"):
+        raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
+    n = float(cfg.active_param_count())
+    return (6.0 if mode == "train" else 2.0) * n
+
+
 # ---------------------------------------------------------------------- #
 # Closed forms from the paper (for tests / sanity checks)
 # ---------------------------------------------------------------------- #

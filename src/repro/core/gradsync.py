@@ -91,6 +91,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mesh as M
+from repro.core import trace
 from repro.core.partition import ParamSpec
 
 
@@ -443,12 +444,13 @@ def reduce_scatter_grads(grads, plan: BucketPlan, axes: M.MeshAxes, *,
     (this rank's ``1/G_data`` block of each data-summed bucket)."""
     leaves = jax.tree.leaves(grads)
     out = []
-    for b in plan.buckets:
-        flat = flatten_bucket(leaves, b)
-        if ring:
-            out.append(M.ring_reduce_scatter(flat, axes.data, dim=-1))
-        else:
-            out.append(M.psum_scatter(flat, axes.data, dim=-1))
+    for i, b in enumerate(plan.buckets):
+        with trace.scope("dp_rs", None, f"bucket{i}"):
+            flat = flatten_bucket(leaves, b)
+            if ring:
+                out.append(M.ring_reduce_scatter(flat, axes.data, dim=-1))
+            else:
+                out.append(M.psum_scatter(flat, axes.data, dim=-1))
     return out
 
 
@@ -480,10 +482,11 @@ def _gather_to_tree(shards: Sequence, plan: BucketPlan, axes: M.MeshAxes,
     optionally cast each shard to its bucket's param dtype, gather over
     ``data``, unflatten every bucket back into leaves."""
     leaves: List = [None] * plan.n_leaves
-    for b, s in zip(plan.buckets, shards):
-        full = _gather(s.astype(b.dtype) if cast else s, axes, ring)
-        for i, arr in unflatten_bucket(full, b):
-            leaves[i] = arr
+    for i, (b, s) in enumerate(zip(plan.buckets, shards)):
+        with trace.scope("dp_ag", None, f"bucket{i}"):
+            full = _gather(s.astype(b.dtype) if cast else s, axes, ring)
+        for j, arr in unflatten_bucket(full, b):
+            leaves[j] = arr
     return jax.tree.unflatten(plan.treedef, leaves)
 
 
@@ -530,11 +533,12 @@ def gather_param_leaf(shard, bucket: Bucket, axes: M.MeshAxes, *,
     whole stacked leaf (checkpoint/serve path). Differentiable: the
     transpose is a ring reduce-scatter over ``data`` — the backward's DP
     gradient sync falls out of autodiff."""
-    full = _gather(shard, axes, ring)
     seg = bucket.segments[0]
-    if full.ndim == 2:
-        return full[:, :seg.size].reshape((bucket.stack,) + seg.shape)
-    return full[:seg.size].reshape(seg.shape)
+    with trace.scope("zero3_ag", axes.data, f"leaf{seg.leaf}"):
+        full = _gather(shard, axes, ring)
+        if full.ndim == 2:
+            return full[:, :seg.size].reshape((bucket.stack,) + seg.shape)
+        return full[:seg.size].reshape(seg.shape)
 
 
 def unshard_params(shards, plan: BucketPlan, axes: M.MeshAxes, *,
@@ -617,7 +621,10 @@ class ParamStreamer:
         return jax.tree.unflatten(self.plan.treedef, out)
 
     def gather(self, shard, bucket: Bucket):
-        return gather_param_leaf(shard, bucket, self.axes, ring=self.ring)
+        with trace.scope("zero3_stream",
+                         detail="prefetch" if self.prefetch else "jit"):
+            return gather_param_leaf(shard, bucket, self.axes,
+                                     ring=self.ring)
 
     def gather_tree(self, shards, buckets):
         """Gather a (sub)tree of shards against its bucket subtree —

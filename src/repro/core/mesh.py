@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import trace
 from repro.core.compat import axis_size as _axis_size
 from repro.core.overlap import OverlapConfig
 
@@ -280,12 +281,14 @@ def ring_all_gather(v, axis: AxisName, *, dim: int):
     out = jnp.zeros(tuple(out_shape), v.dtype)
     cur = v
     for s in range(p):
-        # after s hops of the send-right ring, we hold rank (i - s)'s block
-        j = (idx - s) % p
-        out = jax.lax.dynamic_update_slice_in_dim(out, cur, j * chunk,
-                                                  axis=dim)
-        if s < p - 1:
-            cur = jax.lax.ppermute(cur, axn, perm)
+        with trace.scope("ring_ag", axis, f"hop{s}"):
+            # after s hops of the send-right ring, we hold rank
+            # (i - s)'s block
+            j = (idx - s) % p
+            out = jax.lax.dynamic_update_slice_in_dim(out, cur, j * chunk,
+                                                      axis=dim)
+            if s < p - 1:
+                cur = jax.lax.ppermute(cur, axn, perm)
     return out
 
 
@@ -311,13 +314,15 @@ def ring_reduce_scatter(v, axis: AxisName, *, dim: int):
     chunk = v.shape[dim] // p
     recv = None
     for s in range(1, p):
-        # the partial destined for rank (i - s) leaves here at step s
-        j = (idx - s) % p
-        g = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=dim)
-        part = g if recv is None else recv + g
-        recv = jax.lax.ppermute(part, axn, perm)
-    g = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=dim)
-    return g if recv is None else recv + g
+        with trace.scope("ring_rs", axis, f"hop{s - 1}"):
+            # the partial destined for rank (i - s) leaves here at step s
+            j = (idx - s) % p
+            g = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=dim)
+            part = g if recv is None else recv + g
+            recv = jax.lax.ppermute(part, axn, perm)
+    with trace.scope("ring_rs", axis, "local"):
+        g = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=dim)
+        return g if recv is None else recv + g
 
 
 def ring_all_reduce(v, axis: AxisName, *, dim: int = -1):
@@ -340,12 +345,14 @@ def ring_all_reduce(v, axis: AxisName, *, dim: int = -1):
     if p == 1:
         return v
     if p == 2:
-        return v + jax.lax.ppermute(v, axn, ring_perm(2))
+        with trace.scope("ring_ar", axis, "exchange"):
+            return v + jax.lax.ppermute(v, axn, ring_perm(2))
     dim = dim % v.ndim
     if v.shape[dim] % p:
         return jax.lax.psum(v, n)
-    return ring_all_gather(ring_reduce_scatter(v, axis, dim=dim), axis,
-                           dim=dim)
+    with trace.scope("ring_ar", axis):
+        return ring_all_gather(ring_reduce_scatter(v, axis, dim=dim), axis,
+                               dim=dim)
 
 
 def stripe_seq(v, p: int, *, dim: int = 1):

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collective_matmul as CMM
 from repro.core import mesh as M
+from repro.core import trace
 from repro.core.overlap import OverlapConfig  # noqa: F401  (re-export)
 from repro.core.partition import Boxed
 
@@ -399,13 +400,14 @@ def embedding_lookup(tokens, table, axes: M.MeshAxes):
 
 
 def _emb_fwd(tokens, table, axes):
-    if axes.overlap.embed_gather:
-        # ring-decomposed AG_z: same blocks in the same positions
-        # (bitwise-identical result), but as a ppermute chain the
-        # scheduler can start the lookup on resident shards early
-        tf = M.ring_all_gather(table, axes.z, dim=1)
-    else:
-        tf = M.all_gather(table, axes.z, dim=1)
+    with trace.scope("embed_gather", axes.z):
+        if axes.overlap.embed_gather:
+            # ring-decomposed AG_z: same blocks in the same positions
+            # (bitwise-identical result), but as a ppermute chain the
+            # scheduler can start the lookup on resident shards early
+            tf = M.ring_all_gather(table, axes.z, dim=1)
+        else:
+            tf = M.all_gather(table, axes.z, dim=1)
     v_local = tf.shape[0]
     start = M.axis_index(axes.y) * v_local
     local = tokens - start

@@ -195,14 +195,15 @@ class Roofline:
 
 def model_flops_per_device(cfg, shape, n_devices: int) -> float:
     """6*N_active*D for training, 2*N_active*D for prefill/decode,
-    divided by device count (to compare with per-device HLO flops)."""
-    n = cfg.active_param_count()
-    if shape.kind == "train":
-        total = 6.0 * n * shape.global_batch * shape.seq_len
-    elif shape.kind == "prefill":
-        total = 2.0 * n * shape.global_batch * shape.seq_len
+    divided by device count (to compare with per-device HLO flops).
+    The per-token factor is ``comm_model.model_flops_per_token`` — the
+    same constant the telemetry MFU divides by."""
+    per_tok = CM.model_flops_per_token(
+        cfg, "train" if shape.kind == "train" else "serve")
+    if shape.kind in ("train", "prefill"):
+        total = per_tok * shape.global_batch * shape.seq_len
     else:  # decode: one token per sequence
-        total = 2.0 * n * shape.global_batch
+        total = per_tok * shape.global_batch
     return total / n_devices
 
 

@@ -79,6 +79,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="prefill chunk rows per mixed step")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload RNG seed")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-step scheduler counters (queue depth, page "
+                         "utilization, preemptions) + tokens/s as "
+                         "schema'd JSONL under runs/telemetry/ "
+                         "(--mode continuous; docs/telemetry.md)")
+    ap.add_argument("--log-file", default=None,
+                    help="telemetry JSONL path (implies --telemetry; "
+                         "default runs/telemetry/<run>.jsonl)")
     ap.add_argument("--overlap", action="store_true",
                     help="ring-decomposed collective matmuls in the "
                          "prefill/decode steps (core/overlap.py: "
@@ -188,7 +196,32 @@ def run_continuous(args) -> None:
             prompt=rng.randint(1, cfg.vocab_size,
                                size=(args.prompt_len,)).astype(np.int32),
             max_new=args.gen, arrival=t))
-    stats = engine.run(reqs)
+    telem = None
+    if args.telemetry or args.log_file:
+        from repro.core import comm_model as CM
+        from repro.launch import telemetry as TL
+        run_name = f"serve-{cfg.name}-{time.strftime('%Y%m%d-%H%M%S')}"
+        telem = TL.Telemetry(
+            run_name, path=args.log_file,
+            tokens_per_step=0,  # serve steps carry their own new_tokens
+            flops_per_token=CM.model_flops_per_token(cfg, "serve"),
+            peak_flops_per_device=CM.TPU_V5E.flops,
+            n_devices=int(mesh.devices.size),
+            meta={"arch": cfg.name, "mesh": args.mesh, "mode": "continuous",
+                  "slots": args.slots, "pages": args.pages,
+                  "requests": args.requests, "rate": args.rate})
+    stats = engine.run(reqs, telemetry=telem)
+    if telem is not None:
+        # summary tok_s comes from the engine's open-loop wall clock so
+        # the JSONL agrees with the printed stats (and the perf CSV)
+        telem.close(extra={
+            "tok_s": stats.tokens_per_s, "wall_s": stats.wall_s,
+            "steps": stats.n_steps, "tokens": stats.total_new_tokens,
+            "preemptions": stats.n_preemptions,
+            "ttft_p50_ms": stats.ttft_p50_ms,
+            "ttft_p99_ms": stats.ttft_p99_ms,
+            "latency_p50_ms": stats.latency_p50_ms,
+            "latency_p99_ms": stats.latency_p99_ms})
     for r in reqs[: min(4, len(reqs))]:
         print(f"req {r.rid}: {np.asarray(r.generated, np.int32)}")
     print(f"served {stats.n_requests} requests / "

@@ -121,16 +121,23 @@ class PagedEngine:
         # no zeroing is needed — the stale-page guarantee the tests pin.
 
     def run(self, requests: List[Request], *,
-            time_fn=time.time) -> ServeStats:
+            time_fn=time.time, telemetry=None) -> ServeStats:
         """Serve ``requests`` (arrival-sorted, ``arrival`` in seconds
         relative to start) to completion; open-loop: the clock keeps
-        running whether or not the engine keeps up."""
+        running whether or not the engine keeps up.
+
+        ``telemetry`` (a ``launch.telemetry.Telemetry``) receives one
+        ``serve_step`` record per executed plan: step kind, new tokens,
+        queue depth, active slots, page-pool utilization and the
+        cumulative preemption count. ``_run_plan`` already syncs on the
+        sampled host tokens, so the per-step clock costs nothing extra."""
         s = self.sched
         for r in sorted(requests, key=lambda r: r.arrival):
             s.submit(r)
         t0 = time_fn()
         n_steps = 0
         total_new = 0
+        page_cap = sum(a.n_pages - 1 for a in s.allocators)
         while not s.all_done():
             now = time_fn() - t0
             s.admit(now)
@@ -140,9 +147,18 @@ class PagedEngine:
                 next_t = s.queue[0].arrival
                 time.sleep(min(max(next_t - now, 0.0), 0.01))
                 continue
+            t_plan = time_fn()
             sampled = self._run_plan(plan)
             n_steps += 1
-            total_new += s.commit(plan, sampled, now=time_fn() - t0)
+            new = s.commit(plan, sampled, now=time_fn() - t0)
+            total_new += new
+            if telemetry is not None:
+                telemetry.serve_step(
+                    n_steps - 1, time_fn() - t_plan, new_tokens=new,
+                    queue_depth=len(s.queue), active=plan.n_active,
+                    page_util=(sum(a.n_used for a in s.allocators)
+                               / max(page_cap, 1)),
+                    preemptions=s.n_preemptions, step_kind=plan.kind)
         wall = time_fn() - t0
         lat = [r.t_done - r.arrival for r in requests]
         ttft = [r.t_first - r.arrival for r in requests]

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
 
@@ -106,8 +105,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="checkpoint directory to save at the end")
     ap.add_argument("--log-every", type=int, default=10,
                     help="steps between metric log lines")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-step JSONL telemetry to runs/telemetry/"
+                         "<run>.jsonl (launch/telemetry.py): step time "
+                         "EMA + p50/p99, tokens/s, MFU, loss/grad-norm, "
+                         "peak device bytes, and — with --calib — the "
+                         "predicted-vs-measured drift ratio. Blocks on "
+                         "each step's metrics, so the host loop "
+                         "serializes with the device")
+    ap.add_argument("--profile-steps", default="", metavar="A:B",
+                    help="capture a jax.profiler trace of steps A..B "
+                         "(inclusive) to runs/profiles/<run>/, with "
+                         "named-scope attribution (core/trace.py) "
+                         "enabled so ring hops/buckets/gathers are "
+                         "labeled in the trace")
     ap.add_argument("--log-file", default="",
-                    help="JSON metrics sink")
+                    help="telemetry JSONL path (implies --telemetry; "
+                         "default runs/telemetry/<run>.jsonl)")
     return ap
 
 
@@ -120,6 +134,18 @@ def main():
     if args.calib:
         from repro.core import calibrate as CB
         calib_hw = CB.resolve_hw(args.calib)
+
+    profile_steps = None
+    if args.profile_steps:
+        from repro.core import trace
+        a, _, b = args.profile_steps.partition(":")
+        profile_steps = (int(a), int(b))
+        if not (0 <= profile_steps[0] <= profile_steps[1]):
+            raise SystemExit(f"--profile-steps {args.profile_steps}: "
+                             f"need 0 <= A <= B")
+        # the captured window should attribute its ring hops; enable
+        # BEFORE the step is traced (jit caches don't key on the flag)
+        trace.enable()
 
     shape = tuple(int(x) for x in args.mesh.split(","))
     mesh = LM.make_smoke_mesh(shape, ("data", "x", "y", "z"))
@@ -158,26 +184,85 @@ def main():
     data = SyntheticText(DataConfig(vocab_size=cfg.vocab_size,
                                     seq_len=args.seq,
                                     global_batch=args.batch))
+
+    pred = None
+    if calib_hw is not None:
+        # the α-β model's step time for THIS run, priced with the --calib
+        # profile: seeds the drift monitor and the end-of-run print
+        from repro.core import comm_model as CM
+        hw = dataclasses.replace(
+            calib_hw, bytes_per_elem=float(jnp.dtype(dtype).itemsize))
+        pred = CM.predict_step_time(
+            list(cfg.comm_layers()), args.batch * args.seq,
+            CM.Decomposition(*shape), hw, gradsync=gs,
+            microbatches=args.overdecompose)
+
+    run_name = f"{cfg.name}-{time.strftime('%Y%m%d-%H%M%S')}"
+    telem = None
+    if args.telemetry or args.log_file:
+        from repro.core import comm_model as CM
+        from repro.launch import telemetry as TL
+        telem = TL.Telemetry(
+            run_name, path=args.log_file or None,
+            tokens_per_step=args.batch * args.seq,
+            flops_per_token=CM.model_flops_per_token(cfg),
+            peak_flops_per_device=(calib_hw.flops if calib_hw is not None
+                                   else CM.TPU_V5E.flops),
+            n_devices=int(mesh.devices.size),
+            drift=(TL.DriftMonitor(pred.total)
+                   if pred is not None and pred.total > 0 else None),
+            meta={"arch": cfg.name, "mesh": list(shape),
+                  "n_devices": int(mesh.devices.size), "batch": args.batch,
+                  "seq": args.seq, "dtype": args.dtype,
+                  "calib": args.calib})
+
     log = []
     t0 = time.time()
     t_warm = None  # set after step 0 (compile excluded from step timing)
+    t_step = None  # previous step's end — the per-step telemetry clock
+    prof_on = False
     for step in range(args.steps):
+        if profile_steps and step == profile_steps[0]:
+            prof_dir = os.path.join("runs", "profiles", run_name)
+            jax.profiler.start_trace(prof_dir)
+            prof_on = True
         batch = {k: jnp.asarray(v) for k, v in
-                 make_batch(cfg, step, data,
-                            dtype=np.float32 if dtype == jnp.float32
-                            else np.float32).items()}
+                 make_batch(cfg, step, data, dtype=np.float32).items()}
         if dtype == jnp.bfloat16:
             batch = {k: (v.astype(jnp.bfloat16) if v.dtype == jnp.float32
                          else v) for k, v in batch.items()}
         params, state, metrics = step_fn(params, state, batch)
         if step == 0:
             jax.block_until_ready(metrics["loss"])
-            t_warm = time.time()
+            t_step = t_warm = time.time()
+        elif telem is not None:
+            # per-step wall time needs the step's result on host; the
+            # telemetry-off path keeps the async dispatch loop untouched
+            jax.block_until_ready(metrics["loss"])
+            now = time.time()
+            telem.train_step(step, now - t_step,
+                             loss=float(metrics["loss"]),
+                             grad_norm=float(metrics["grad_norm"]))
+            t_step = now
+        if prof_on and step == profile_steps[1]:
+            if telem is None and step > 0:
+                jax.block_until_ready(metrics["loss"])
+            jax.profiler.stop_trace()
+            prof_on = False
+            print(f"profile: steps {profile_steps[0]}..{profile_steps[1]} "
+                  f"-> runs/profiles/{run_name}", flush=True)
         if step % args.log_every == 0 or step == args.steps - 1:
             loss = float(metrics["loss"])
             gn = float(metrics["grad_norm"])
-            dt = time.time() - t0
-            tok_s = (step + 1) * args.batch * args.seq / dt
+            if step == 0:
+                # step 0's clock is dominated by compile; report as-is
+                tok_s = args.batch * args.seq / max(time.time() - t0, 1e-9)
+            else:
+                # warm clock over steps 1..step — dividing by the t0
+                # window would fold step 0's compile into steady-state
+                # throughput and understate it
+                tok_s = (step * args.batch * args.seq
+                         / max(time.time() - t_warm, 1e-9))
             print(f"step {step:5d} loss {loss:.4f} gnorm {gn:.3f} "
                   f"{tok_s:,.0f} tok/s", flush=True)
             log.append({"step": step, "loss": loss, "grad_norm": gn,
@@ -185,6 +270,9 @@ def main():
             assert np.isfinite(loss), "NaN loss"
     jax.block_until_ready(params)
     t_end = time.time()  # before the checkpoint write pollutes the clock
+    if prof_on:
+        # the window ran off the end of the run (B >= steps)
+        jax.profiler.stop_trace()
 
     if args.ckpt:
         if gs.state_sharded:
@@ -201,25 +289,27 @@ def main():
             ckpt.save(args.ckpt, jax.tree.map(np.asarray, params),
                       step=step, pspecs=pspecs)
         print("saved", args.ckpt)
-    if args.calib and args.steps > 1:
+    if pred is not None and args.steps > 1:
         # predicted-vs-measured validation line: the α-β model priced
         # with the --calib profile against this run's wall clock
-        from repro.core import comm_model as CM
         measured_s = (t_end - t_warm) / (args.steps - 1)
-        hw = dataclasses.replace(
-            calib_hw, bytes_per_elem=float(jnp.dtype(dtype).itemsize))
-        pred = CM.predict_step_time(
-            list(cfg.comm_layers()), args.batch * args.seq,
-            CM.Decomposition(*shape), hw, gradsync=gs,
-            microbatches=args.overdecompose)
         print(f"calib[{args.calib}]: predicted step "
               f"{pred.total * 1e3:.2f} ms (compute {pred.compute * 1e3:.2f}"
               f" + exposed {pred.exposed_comm * 1e3:.2f}), measured "
               f"{measured_s * 1e3:.2f} ms/step")
-    if args.log_file:
-        os.makedirs(os.path.dirname(args.log_file) or ".", exist_ok=True)
-        with open(args.log_file, "w") as f:
-            json.dump({"arch": cfg.name, "log": log}, f)
+    if telem is not None:
+        telem.close()
+        if telem.drift is not None and telem.drift.n and args.calib:
+            # fold the measured/predicted verdict back into the profile
+            # (probes only — the fitted constants stay untouched)
+            from repro.core import calibrate as CB
+            prof = CB.resolve(args.calib)
+            if prof is not None:
+                path = (CB.default_path() if args.calib == "auto"
+                        else args.calib)
+                CB.merge_drift(prof, telem.drift.record(
+                    workload=f"{cfg.name}@{args.mesh}")).save(path)
+                print(f"drift record merged into {path}")
     print("final loss:", log[-1]["loss"])
 
 

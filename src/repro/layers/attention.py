@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mesh as M
 from repro.core import parallel as PP
+from repro.core import trace
 from repro.core.partition import Boxed
 from repro.layers.rotary import apply_rope, apply_rope_interleaved_neox
 
@@ -360,18 +361,19 @@ def seq_attn(q, k, v, axes: M.MeshAxes, *, causal: bool = True,
     cur_k, cur_v = k, v
     local = jnp.arange(C, dtype=jnp.int32) * p
     for s in range(p):
-        if s < p - 1:
-            # prefetch: hop s+1's KV permutes while hop s computes (the
-            # permute has no data dependency on this hop's partials, so
-            # the latency-hiding scheduler overlaps them)
-            nxt_k = M.ppermute_ring(cur_k, axes.seq)
-            nxt_v = M.ppermute_ring(cur_v, axes.seq)
-        owner = (r - s) % p
-        carry = attn_core_partial(q, cur_k, cur_v, carry, q_pos=q_pos,
-                                  k_pos=local + owner, causal=causal,
-                                  window=window)
-        if s < p - 1:
-            cur_k, cur_v = nxt_k, nxt_v
+        with trace.scope("ring_exchange", axes.seq, f"hop{s}"):
+            if s < p - 1:
+                # prefetch: hop s+1's KV permutes while hop s computes
+                # (the permute has no data dependency on this hop's
+                # partials, so the latency-hiding scheduler overlaps them)
+                nxt_k = M.ppermute_ring(cur_k, axes.seq)
+                nxt_v = M.ppermute_ring(cur_v, axes.seq)
+            owner = (r - s) % p
+            carry = attn_core_partial(q, cur_k, cur_v, carry, q_pos=q_pos,
+                                      k_pos=local + owner, causal=causal,
+                                      window=window)
+            if s < p - 1:
+                cur_k, cur_v = nxt_k, nxt_v
     return attn_partial_finalize(carry, q.dtype)
 
 
