@@ -1,3 +1,3 @@
 """npz pytree checkpointing with sharding metadata."""
-from repro.checkpoint.ckpt import restore, restore_sharded, save, \
-    save_sharded
+from repro.checkpoint.ckpt import CheckpointError, restore, \
+    restore_sharded, save, save_sharded, verify

@@ -278,6 +278,17 @@ def merge_drift(profile: CalibrationProfile, record: Dict
     return dataclasses.replace(profile, probes=probes)
 
 
+def merge_probes(profile: CalibrationProfile, records: Sequence[Dict]
+                 ) -> CalibrationProfile:
+    """Fold a batch of drift records into ``profile.probes`` — the
+    per-collective-class verdicts of ``launch.probes.CollectiveProbes``
+    (workloads ``collective:<class>``) land as ``drift:collective:<class>``
+    keys next to the whole-step ``drift:<workload>`` entries."""
+    for rec in records:
+        profile = merge_drift(profile, rec)
+    return profile
+
+
 # ---------------------------------------------------------------------- #
 # Microbenchmark harness (host-backend timings; needs >= 2 devices)
 # ---------------------------------------------------------------------- #

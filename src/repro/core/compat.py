@@ -50,6 +50,14 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
     older versions treat every axis the way ``Auto`` does, so dropping the
     argument preserves behaviour.
     """
+    if devices is not None and "devices" not in _MM_PARAMS:
+        # old JAX: jax.make_mesh has no devices kwarg. A device-subset
+        # mesh (MeshLifecycle rebuilding after a simulated rank loss)
+        # falls back to the raw Mesh constructor, which also gives the
+        # deterministic device order the elastic tests rely on.
+        import numpy as np
+        arr = np.asarray(devices, dtype=object).reshape(tuple(axis_shapes))
+        return jax.sharding.Mesh(arr, tuple(axis_names))
     kw: dict = {}
     if devices is not None:
         kw["devices"] = devices

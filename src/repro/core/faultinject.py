@@ -1,0 +1,199 @@
+"""Deterministic, seedable fault injection for chaos-mode runs.
+
+At real scale the mesh changes under you: ranks drop, collectives hang
+rather than fail, and storage bit-rots. This module simulates those
+events *deterministically* so the recovery machinery in
+``launch.train`` (checkpoint-or-restore, ``MeshLifecycle`` rebuild,
+online re-shard) can be exercised in CI on a single host.
+
+Chaos specs are compact strings passed via ``--chaos``::
+
+    seed=0;rank_loss@5:n=4,via=online;ckpt_corrupt@3;timeout@7:class=dp_rs_ag,secs=0.2
+
+Grammar: ``;``-separated tokens. ``seed=<int>`` sets the RNG seed;
+every other token is ``<kind>@<step>[:k=v,k=v...]``:
+
+``rank_loss@S``
+    Before step S, raise :class:`RankLossError` simulating the loss of
+    ``n`` devices (default 1). ``via=online`` (default) recovers from
+    the in-memory snapshot; ``via=ckpt`` forces the checkpoint-restore
+    path first (falling back to the snapshot if the file is corrupt).
+
+``ckpt_corrupt@S``
+    Before step S, corrupt the run's checkpoint file in place:
+    ``mode=bitflip`` (default) flips one byte inside a deterministically
+    chosen leaf's data; ``mode=truncate`` cuts the file in half. Either
+    way the hardened reader must refuse the file with a clear error.
+
+``timeout@S``
+    At step S, inflate the measured wall time of one collective-probe
+    class (``class=`` one of ``launch.probes.PROBE_CLASSES``; ``secs=``
+    the injected stall) so the watchdog classifies the step as a hung
+    collective rather than slow compute.
+
+All randomness derives from ``(seed, kind, step)`` so events are
+reproducible and order-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import zipfile
+import zlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+KINDS = ("rank_loss", "ckpt_corrupt", "timeout")
+
+
+class RankLossError(RuntimeError):
+    """Simulated loss of one or more ranks, raised between steps."""
+
+    def __init__(self, step: int, n_lost: int = 1, via: str = "online"):
+        self.step = int(step)
+        self.n_lost = int(n_lost)
+        self.via = via
+        super().__init__(
+            f"simulated loss of {n_lost} rank(s) before step {step} "
+            f"(recover via={via})")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    kind: str
+    step: int
+    params: Dict[str, str]
+
+    def get(self, key: str, default: str = "") -> str:
+        return self.params.get(key, default)
+
+    def rng(self, seed: int) -> np.random.Generator:
+        """Event-local RNG derived from (seed, kind, step)."""
+        tag = zlib.crc32(f"{seed}:{self.kind}:{self.step}".encode())
+        return np.random.default_rng(tag)
+
+
+def parse_chaos(spec: str) -> "FaultInjector":
+    """Parse a ``--chaos`` spec string into a :class:`FaultInjector`."""
+    seed = 0
+    events: List[ChaosEvent] = []
+    for token in filter(None, (t.strip() for t in spec.split(";"))):
+        if token.startswith("seed="):
+            seed = int(token.split("=", 1)[1])
+            continue
+        if "@" not in token:
+            raise ValueError(
+                f"chaos token {token!r}: expected '<kind>@<step>[:k=v,...]'"
+                f" or 'seed=<int>'")
+        head, _, tail = token.partition(":")
+        kind, _, step_s = head.partition("@")
+        if kind not in KINDS:
+            raise ValueError(
+                f"chaos token {token!r}: unknown kind {kind!r} "
+                f"(expected one of {KINDS})")
+        params: Dict[str, str] = {}
+        for kv in filter(None, tail.split(",")):
+            if "=" not in kv:
+                raise ValueError(
+                    f"chaos token {token!r}: bad param {kv!r}")
+            k, v = kv.split("=", 1)
+            params[k.strip()] = v.strip()
+        events.append(ChaosEvent(kind, int(step_s), params))
+    return FaultInjector(events, seed=seed)
+
+
+class FaultInjector:
+    """Schedules :class:`ChaosEvent`s against the training step counter.
+
+    The train loop asks ``events_at(step)`` once per step (events fire
+    at most once even if a step index is retried after recovery) and
+    the probe layer asks ``probe_delay(step, cls)`` for injected
+    collective stalls.
+    """
+
+    def __init__(self, events: List[ChaosEvent], *, seed: int = 0):
+        self.events = sorted(events, key=lambda e: e.step)
+        self.seed = int(seed)
+        self.fired: List[ChaosEvent] = []
+
+    def events_at(self, step: int) -> List[ChaosEvent]:
+        out = []
+        for ev in self.events:
+            if ev.step == step and ev not in self.fired:
+                self.fired.append(ev)
+                out.append(ev)
+        return out
+
+    def probe_delay(self, step: int, cls: str) -> float:
+        """Injected stall (seconds) for probe class ``cls`` at ``step``.
+
+        Unlike ``events_at`` this is a pure query — timeout events stay
+        active for every probe run at their step.
+        """
+        total = 0.0
+        for ev in self.events:
+            if ev.kind == "timeout" and ev.step == step \
+                    and ev.get("class", "") == cls:
+                total += float(ev.get("secs", "0.25"))
+        return total
+
+    def step_stall(self, step: int) -> float:
+        """Total injected stall for the *training step* at ``step`` (all
+        timeout events regardless of class): a hung collective stalls
+        the step that issues it, which is what trips the watchdog; the
+        per-class ``probe_delay`` then attributes the blame."""
+        total = 0.0
+        for ev in self.events:
+            if ev.kind == "timeout" and ev.step == step:
+                total += float(ev.get("secs", "0.25"))
+        return total
+
+    def summary(self) -> dict:
+        return {"seed": self.seed,
+                "events": [dataclasses.asdict(e) for e in self.events],
+                "fired": len(self.fired)}
+
+
+# ---------------------------------------------------------------------- #
+# checkpoint corruption
+# ---------------------------------------------------------------------- #
+
+def corrupt_checkpoint(path: str, *, seed: int = 0, step: int = 0,
+                       mode: str = "bitflip",
+                       leaf: Optional[str] = None) -> str:
+    """Deterministically damage a checkpoint file in place.
+
+    ``bitflip`` picks a member (``leaf`` names one explicitly; otherwise
+    the event RNG chooses) and flips one byte inside its data region, so
+    the zip CRC / per-leaf checksum layers must catch it. ``truncate``
+    halves the file, so the container itself is unreadable. Returns a
+    short description of what was damaged (for the telemetry event
+    record).
+    """
+    if not os.path.exists(path) and os.path.exists(path + ".npz"):
+        path = path + ".npz"
+    rng = ChaosEvent("ckpt_corrupt", step, {}).rng(seed)
+    raw = bytearray(open(path, "rb").read())
+    if mode == "truncate":
+        open(path, "wb").write(bytes(raw[: len(raw) // 2]))
+        return f"truncated {os.path.basename(path)} to {len(raw) // 2} bytes"
+    if mode != "bitflip":
+        raise ValueError(f"corrupt_checkpoint: unknown mode {mode!r}")
+    with zipfile.ZipFile(path) as z:
+        infos = [i for i in z.infolist()
+                 if i.filename != "__meta__.npy" and i.file_size > 256]
+        if leaf is not None:
+            infos = [i for i in infos
+                     if i.filename == leaf or i.filename == leaf + ".npy"]
+        if not infos:
+            raise ValueError(f"corrupt_checkpoint: no target member in "
+                             f"{path!r} (leaf={leaf!r})")
+        info = infos[int(rng.integers(len(infos)))]
+    # skip past the local file header + filename + the ~128-byte npy
+    # header so the flip lands in array data, then damage one byte
+    data_start = info.header_offset + 30 + len(info.filename) + 160
+    pos = data_start + int(rng.integers(max(1, info.file_size - 200)))
+    raw[pos] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    return f"flipped byte {pos} inside member {info.filename!r}"

@@ -244,6 +244,29 @@ class BucketPlan:
         return sum(b.padded * b.stack for b in self.buckets)
 
 
+def plan_fingerprint(plan: BucketPlan) -> str:
+    """Stable digest of a plan's *replicated* leaf layout.
+
+    Covers everything that determines the replicated per-leaf state a
+    checkpoint (or an in-memory elastic snapshot) carries — leaf count,
+    per-slot sizes/segments, stacking, dtypes, reduction classes — but
+    deliberately excludes ``dp`` and the dp-derived padding, so two
+    plans built at different ``g_data`` over the same model/tensor
+    factors fingerprint identically. ``launch.steps.restore_state``
+    compares fingerprints across an elastic rebuild: a mismatch means
+    the rebuild changed the tensor partitioning (not just the data
+    axis) and the snapshot cannot be re-sharded onto it.
+    """
+    import hashlib
+    h = hashlib.sha256(f"{plan.n_leaves}".encode())
+    for b in plan.buckets:
+        h.update(f"|{b.size}:{b.stack}:{jnp.dtype(b.dtype).name}"
+                 f":{int(b.z_reduced)}:{int(b.y_reduce)}".encode())
+        for s in b.segments:
+            h.update(f";{s.leaf}:{s.offset}:{s.size}:{s.shape}".encode())
+    return h.hexdigest()[:16]
+
+
 def _local_shape(shape, spec, axes: M.MeshAxes) -> Tuple[int, ...]:
     """Per-device shape of a leaf whose GLOBAL shape is ``shape``."""
     sizes = dict(axes.sizes)

@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import gradsync as GS
@@ -449,6 +450,72 @@ def make_gradsync_tools(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     return GradSyncTools(plan=plan, state_pspecs=sspecs,
                          init=jax.jit(init), gather=jax.jit(gather),
                          scatter=jax.jit(scatter), **extra)
+
+
+# ---------------------------------------------------------------------- #
+# elastic snapshot / restore (host replicated layout == checkpoint layout)
+# ---------------------------------------------------------------------- #
+
+def snapshot_state(params, opt_state, tools: Optional[GradSyncTools],
+                   opts: TrainOptions, *, step: int = 0) -> dict:
+    """Host snapshot of the run state in the REPLICATED per-leaf layout.
+
+    This is byte-for-byte the tree ``ckpt.save_sharded`` persists (params
+    unsharded under zero3, optimizer state gathered through the same
+    jitted ``tools.gather``), kept in memory instead of written to disk —
+    the currency of ``MeshLifecycle.reshard``. The plan fingerprint rides
+    along so ``restore_state`` can reject a rebuild whose tensor
+    partitioning (not just g_data) changed.
+    """
+    gs = opts.gradsync
+    fp = None
+    if gs.state_sharded:
+        assert tools is not None, "sharded state needs GradSyncTools"
+        full_p = tools.unshard_params(params) if gs.zero3 else params
+        full_s = tools.gather(opt_state)
+        fp = GS.plan_fingerprint(tools.plan)
+    else:
+        full_p, full_s = params, opt_state
+    return {"params": jax.tree.map(np.asarray, jax.device_get(full_p)),
+            "opt_state": jax.tree.map(np.asarray, jax.device_get(full_s)),
+            "step": int(step), "fingerprint": fp}
+
+
+def restore_state(snapshot: dict, cfg: ArchConfig, mesh: Mesh,
+                  axes: M.MeshAxes, tools: Optional[GradSyncTools],
+                  opts: TrainOptions):
+    """Re-shard a :func:`snapshot_state` snapshot onto ``(mesh, axes)``.
+
+    Returns ``(params, opt_state)`` in the layout the train step of
+    ``opts`` expects on that mesh — sharded through the new mesh's own
+    ``scatter``/``shard_params`` tools, i.e. the exact converters
+    ``ckpt.restore_sharded`` would use, so restoring from the in-memory
+    snapshot and restoring from a checkpoint of the same step are
+    bitwise identical.
+    """
+    axes = axes.with_overlap(opts.overlap)
+    structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
+    pspecs = spec_tree_to_pspecs(specs)
+    gs = opts.gradsync
+    params = device_put_tree(mesh, snapshot["params"], pspecs)
+    if gs.state_sharded:
+        assert tools is not None, "sharded state needs GradSyncTools"
+        want = snapshot.get("fingerprint")
+        if want is not None:
+            have = GS.plan_fingerprint(tools.plan)
+            if have != want:
+                raise ValueError(
+                    f"elastic restore: bucket-plan fingerprint {have} != "
+                    f"snapshot's {want} — the rebuild changed the tensor "
+                    f"partitioning, not just the data axis; the snapshot "
+                    f"cannot be re-sharded onto this mesh")
+        opt_state = tools.scatter(snapshot["opt_state"])
+        if gs.zero3:
+            params = tools.shard_params(params)
+    else:
+        opt_state = device_put_tree(mesh, snapshot["opt_state"],
+                                    OPT.state_pspecs(pspecs))
+    return params, opt_state
 
 
 # ---------------------------------------------------------------------- #

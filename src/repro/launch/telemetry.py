@@ -17,6 +17,13 @@ prints a human summary table at exit. Record kinds:
                       (:meth:`DriftMonitor.record`) —
                       ``core.calibrate.merge_drift`` folds it back into
                       the calibration profile;
+  * ``probe``       — one per-collective-class health probe firing
+                      (``launch.probes``): measured vs α-β-predicted
+                      time plus the jump over the class's own rolling
+                      baseline;
+  * ``event``       — a lifecycle/chaos event (rank loss, re-shard,
+                      checkpoint corruption detected, watchdog verdict,
+                      graceful shutdown) — the recovery audit trail;
   * ``summary``     — aggregates (p50/p99 step time, tokens/s, MFU,
                       peak bytes) written once at :meth:`Telemetry.close`.
 
@@ -59,10 +66,13 @@ SCHEMA: Dict[str, tuple] = {
     "serve_step": ("step", "step_s", "new_tokens", "queue_depth",
                    "active", "page_util", "preemptions"),
     "drift": ("predicted_s", "measured_p50_s", "ratio", "n"),
+    "probe": ("step", "measured_s", "predicted_s", "ratio", "jump"),
+    "event": ("step",),
     "summary": ("steps", "wall_s"),
 }
 NULLABLE: Dict[str, tuple] = {
     "train_step": ("mfu", "loss", "grad_norm", "peak_bytes", "drift"),
+    "probe": ("injected_s",),
 }
 
 
@@ -281,6 +291,26 @@ class Telemetry:
             "step": step, "step_s": step_s, "ema_s": ema, "tok_s": tok_s,
             "mfu": self.mfu(tok_s), "loss": loss, "grad_norm": grad_norm,
             "peak_bytes": peak_memory_bytes(), "drift": ratio})
+
+    def probe(self, step: int, result) -> dict:
+        """Record one collective-probe firing (``launch.probes
+        .ProbeResult``)."""
+        return self._emit("probe", {
+            "step": int(step), "cls": result.cls,
+            "collective": result.kind,
+            "p": int(result.p), "elems": int(result.elems),
+            "measured_s": float(result.measured_s),
+            "predicted_s": float(result.predicted_s),
+            "ratio": float(result.ratio), "jump": float(result.jump),
+            "injected_s": (float(result.injected_s)
+                           if result.injected_s else None)})
+
+    def event(self, step: int, event: str, **fields) -> dict:
+        """Record a lifecycle/chaos event (free-form string/number
+        fields beyond the required ``step``) — the recovery audit
+        trail chaos tests and operators read back."""
+        return self._emit("event", dict({"step": int(step),
+                                         "event": str(event)}, **fields))
 
     def serve_step(self, step: int, step_s: float, *, new_tokens: int,
                    queue_depth: int, active: int, page_util: float,
