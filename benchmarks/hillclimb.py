@@ -16,8 +16,15 @@ Variants (each an explicit, named change against the pair's baseline):
   seqring      + context parallelism (--seq-parallel: g_seq chosen by the
                model, striped ring attention over the seq mesh axis)
   seqring4     seqring with g_seq pinned to 4
-  factors=a,b,c,d[,s]   explicit decomposition override (5th value opens
-               the seq axis)
+  expertring   + expert parallelism (--expert-parallel: g_expert chosen
+               by the model, ring-decomposed MoE a2a over the expert
+               mesh axis; MoE archs only)
+  expertring4  expertring with g_expert pinned to 4
+  dsv3         deepseek-v3-shaped: expertring + overdecomposition=2
+               (the production MoE recipe — pair it with an MoE arch,
+               e.g. --pair deepseek-v3-671b:train_4k)
+  factors=a,b,c,d[,s[,e]]   explicit decomposition override (5th value
+               opens the seq axis, 6th the expert axis)
 Results append runs/perf/hillclimb.jsonl (per-rank param+optimizer
 bytes land next to the step-time roofline in every record).
 """
@@ -74,12 +81,29 @@ def run_variant(arch, shape, variant, out, probe=True, calib=""):
         kw["seq_parallel"] = True
         kw["overlap"] = True
         kw["g_seq"] = int(variant[len("seqring"):])
+    elif variant == "expertring":
+        # expert parallelism: ring-decomposed MoE dispatch/combine over
+        # the 6th mesh factor, g_expert chosen jointly by the model
+        kw["expert_parallel"] = True
+        kw["overlap"] = True     # ring (not blocking) a2a schedule
+    elif variant.startswith("expertring"):
+        kw["expert_parallel"] = True
+        kw["overlap"] = True
+        kw["g_expert"] = int(variant[len("expertring"):])
+    elif variant == "dsv3":
+        # the deepseek-v3-shaped production recipe: expert-parallel ring
+        # a2a + overdecomposition (pair with an MoE arch)
+        kw["expert_parallel"] = True
+        kw["overlap"] = True
+        kw["overdecompose"] = 2
     elif variant.startswith("factors="):
         f = tuple(int(v) for v in variant.split("=")[1].split(","))
-        assert len(f) in (4, 5), "factors=a,b,c,d[,s]"
+        assert len(f) in (4, 5, 6), "factors=a,b,c,d[,s[,e]]"
         kw["factors"] = f
         if len(f) > 4 and f[4] > 1:
             kw["seq_parallel"] = True
+        if len(f) > 5 and f[5] > 1:
+            kw["expert_parallel"] = True
     else:
         raise ValueError(variant)
     rec, _ = DR.lower_one(arch, shape, mesh, **kw)

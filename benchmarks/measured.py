@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 
 def _train_setup(arch, mesh_shape, *, steps, B, S, overdecompose=1,
-                 seed=0, overlap=None, gradsync=None):
+                 seed=0, overlap=None, gradsync=None, names=None):
     from repro.configs import get_config
     from repro.core.gradsync import GradSyncConfig
     from repro.core.overlap import OverlapConfig
@@ -30,8 +30,10 @@ def _train_setup(arch, mesh_shape, *, steps, B, S, overdecompose=1,
     from repro.launch import steps as ST
     from repro.optim.adamw import AdamWConfig, init_state
 
-    # a 5th entry opens the context-parallel seq axis (bind_4d maps it)
-    names = ("data", "x", "y", "z", "seq")[:len(mesh_shape)]
+    # a 5th entry opens the context-parallel seq axis (bind_4d maps it);
+    # pass ``names`` explicitly to bind other axes (e.g. "expert")
+    if names is None:
+        names = ("data", "x", "y", "z", "seq")[:len(mesh_shape)]
     mesh = LM.make_smoke_mesh(mesh_shape, names)
     axes = LM.bind_4d(mesh)
     cfg = get_config(arch).reduced()
@@ -473,6 +475,95 @@ def ring_attention(steps: int = 4) -> List[Tuple[str, float, str]]:
     assert gap < 1e-3, f"seq sharding changed the loss: {gap}"
     rows.append(("ring_attention/loss_gap", gap,
                  "blocking/ring g_seq=4 vs unsharded, fp32"))
+    return rows
+
+
+def expert_a2a(steps: int = 4) -> List[Tuple[str, float, str]]:
+    """Expert-parallel MoE dispatch, before/after on the train-step HLO
+    (layers/moe.py over the 6th mesh axis, core/collective_matmul.py
+    ring_a2a_expert).
+
+    Three configs of the same MoE model/data on 8 host devices: no
+    expert axis (the extra factor spent on g_data instead — the expert
+    axis at g_expert=1 is a second batch axis, so the baseline sees the
+    identical token shards), g_expert=2 with the blocking
+    ``lax.all_to_all`` dispatch/combine, and g_expert=2 with the ring
+    schedule (``OverlapConfig(expert_a2a=True)`` — per-destination
+    capacity blocks hop via collective-permute, each hop's expert FFN
+    runs while later blocks are still in flight). Each config is
+    compiled ONCE via ``lower().compile()``; its optimized HLO lands in
+    ``runs/bench_hlo/expert_a2a_<mode>.hlo.txt`` for the CI artifact.
+    Asserts the contract: the ring mode has NO all-to-all above scalar
+    size (the dispatch lowers to permute chains), and the loss gap vs
+    the no-expert-axis baseline is ~fp32-reassociation noise (the ring
+    round trip is algebraically the blocking a2a pair)."""
+    import os
+
+    from repro.core.overlap import OverlapConfig
+    from repro.launch import roofline as RL
+
+    if jax.device_count() < 8:
+        return [("expert_a2a/skipped", 0.0,
+                 f"needs 8 devices, have {jax.device_count()}")]
+    pex = 2
+    hlo_dir = os.path.join("runs", "bench_hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    # expert=2 against data=1 keeps the batch shards identical to the
+    # noexp baseline (batch axes = data + z + expert in both)
+    enames = ("data", "x", "y", "z", "expert")
+    modes = [
+        ("noexp", (2, 2, 2, 1), None, None),
+        ("blocking", (1, 2, 2, 1, pex), None, enames),
+        ("ring", (1, 2, 2, 1, pex),
+         OverlapConfig(expert_a2a=True), enames),
+    ]
+    rows, losses, counts, big_a2a = [], {}, {}, {}
+    for name, shape, ov, names in modes:
+        cfg, fn, params, state, batch, _ = _train_setup(
+            "deepseek-v2-lite-16b", shape, steps=steps, B=8, S=64,
+            overlap=ov, names=names)
+        compiled = fn.lower(params, state, batch).compile()
+        hlo = compiled.as_text()
+        with open(os.path.join(hlo_dir, f"expert_a2a_{name}.hlo.txt"),
+                  "w") as f:
+            f.write(hlo)
+        ops = RL.parse_collective_ops(hlo)
+        c = counts[name] = {}
+        for op in ops:
+            c[op.kind] = c.get(op.kind, 0) + 1
+        big_a2a[name] = sum(1 for op in ops if op.kind == "all-to-all"
+                            and op.raw_bytes > 2048)
+        stats = RL.parse_collectives(hlo)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        est = RL.step_time_estimate(float(cost.get("flops", 0.0)),
+                                    stats.bytes_by_kind)
+        params, state, m = compiled(params, state, batch)  # warmup
+        t0 = time.time()
+        for _ in range(steps):
+            params, state, m = compiled(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / steps * 1e6
+        losses[name] = float(m["loss"])
+        rows.append((
+            f"expert_a2a/{name}", us,
+            f"a2a={c.get('all-to-all', 0)} a2a_big={big_a2a[name]} "
+            f"ar={c.get('all-reduce', 0)} "
+            f"cp={c.get('collective-permute', 0)} "
+            f"exposed_us={est.exposed_comm * 1e6:.1f} "
+            f"hidden_us={est.hidden_comm * 1e6:.1f} "
+            f"loss={losses[name]:.4f}"))
+    # blocking dispatches via all-to-all; the ring must not
+    assert big_a2a["blocking"] > 0, big_a2a
+    assert big_a2a["ring"] == 0, \
+        f"ring mode still lowered to all-to-all: {big_a2a}"
+    assert (counts["ring"].get("collective-permute", 0)
+            > counts["blocking"].get("collective-permute", 0)), counts
+    gap = max(abs(losses[k] - losses["noexp"]) for k in losses)
+    assert gap < 1e-3, f"expert sharding changed the loss: {gap}"
+    rows.append(("expert_a2a/loss_gap", gap,
+                 "blocking/ring g_expert=2 vs no expert axis, fp32"))
     return rows
 
 

@@ -72,6 +72,7 @@ def main() -> None:
         "overlap": measured.overlap_collectives,
         "dp_sync": measured.dp_sync,
         "ring_attention": measured.ring_attention,
+        "expert_a2a": measured.expert_a2a,
         "kernels": measured.kernel_micro,
         "serving": lambda: serving.suite(calib=args.calib or ""),
         "roofline": roofline_summary,

@@ -69,7 +69,7 @@ DEFAULT_DIR = os.path.join("runs", "calib")
 #: the *full* buffer bytes, matching comm_model.collective_time's
 #: conventions: all_reduce takes the reduced buffer, AG/RS the full one.
 _KINDS = ("all_gather", "reduce_scatter", "all_reduce", "psum",
-          "ring_exchange")
+          "ring_exchange", "all_to_all")
 
 
 def collective_geometry(kind: str, p: int, buf_bytes: float
@@ -87,6 +87,10 @@ def collective_geometry(kind: str, p: int, buf_bytes: float
     if kind in ("all_reduce", "psum"):
         return 2 * (p - 1), 2.0 * (p - 1) / p * buf_bytes
     if kind in ("all_gather", "reduce_scatter", "ring_exchange"):
+        return p - 1, (p - 1) / p * buf_bytes
+    if kind == "all_to_all":
+        # MoE dispatch: every rank keeps its 1/p block and sends the
+        # other (p-1)/p of the buffer, one pairwise exchange per hop
         return p - 1, (p - 1) / p * buf_bytes
     raise ValueError(f"unknown collective kind {kind!r}")
 
@@ -359,6 +363,10 @@ def _collective_fns(mesh, axis):
                            P(None), P(None)),
         "psum": wrap(lambda v: M.psum(v, axis), P(None), P(None)),
         "ring_exchange": wrap(ring_exchange, P(axis), P(axis)),
+        # all_to_all: each rank holds the full buffer, exchanges the
+        # (p-1)/p of it destined elsewhere (pairwise ppermute ring)
+        "all_to_all": wrap(lambda v: M.ring_all_to_all(v, axis, dim=0),
+                           P(None), P(None)),
     }
 
 
@@ -387,7 +395,7 @@ def measure_axis(mesh, axis, sizes: Sequence[int], *,
         t0 = _timeit(ident, full, reps=reps)
         shard_arg = {"all_gather": full, "reduce_scatter": full,
                      "all_reduce": full, "psum": full,
-                     "ring_exchange": full}
+                     "ring_exchange": full, "all_to_all": full}
         for kind in _KINDS:
             t = max(_timeit(fns[kind], shard_arg[kind], reps=reps) - t0,
                     0.0)

@@ -380,3 +380,51 @@ def ar_matmul_batched_t(x, w, name: AxisRef, *, chunks: int = 1):
             preferred_element_type=jnp.float32)
     return ring_all_reduce_mm(name, mm, out_w=w.shape[1], dtype=x.dtype,
                               chunks=chunks)
+
+
+# ---------------------------------------------------------------------- #
+# expert-axis a2a (called from layers/moe.py)
+# ---------------------------------------------------------------------- #
+
+def ring_a2a_expert(buf, name: AxisRef, ffn: Callable):
+    """MoE dispatch → expert FFN → combine with both expert-axis
+    all-to-alls decomposed into pairwise ``ppermute`` exchanges
+    interleaved with the per-source expert GEMMs.
+
+    ``buf`` (p, ...) is the dispatch buffer, dim 0 indexed by destination
+    expert-rank; ``ffn(block) -> block`` applies this rank's local expert
+    bank to one source rank's token block. Returns ``out`` with
+    ``out[j]`` = rank j's experts' output for ``buf[j]`` — the layout the
+    blocking ``a2a → ffn → a2a`` round trip produces, block for block.
+    Each block crosses the wire exactly once each way (same wire bytes as
+    the two blocking all-to-alls: 2·(p-1)/p of the buffer), so the result
+    is bitwise identical; the p-1 exchange pairs are mutually
+    data-independent, which is what lets XLA's latency-hiding scheduler
+    ride shift s+1's permutes under shift s's GEMMs. Lowers to
+    collective-permutes only — zero all-to-all HLO ops.
+    """
+    p, axn = flat_ring_axis(name)
+    if buf.shape[0] != p:
+        raise ValueError(
+            f"dispatch buffer dim 0 ({buf.shape[0]}) must equal the "
+            f"expert-axis ring size ({p})")
+    if p == 1:
+        return ffn(buf[0])[None]
+    idx = flat_ring_index(name)
+    # shift 0: this rank's own block never crosses the wire
+    with trace.scope("ring_a2a", name, "local"):
+        own = ffn(lax.dynamic_index_in_dim(buf, idx, axis=0,
+                                           keepdims=False))
+    out = jnp.zeros(buf.shape, own.dtype)
+    out = lax.dynamic_update_index_in_dim(out, own, idx, axis=0)
+    for s in range(1, p):
+        with trace.scope("ring_a2a", name, f"shift{s}"):
+            dst = (idx + s) % p
+            send = lax.dynamic_index_in_dim(buf, dst, axis=0,
+                                            keepdims=False)
+            recv = lax.ppermute(send, axn, _ring_perm(p, s))
+            y = ffn(recv)
+            back = lax.ppermute(y.astype(out.dtype), axn,
+                                _ring_perm(p, p - s))
+            out = lax.dynamic_update_index_in_dim(out, back, dst, axis=0)
+    return out

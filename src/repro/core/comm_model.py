@@ -41,7 +41,11 @@ tests/test_gradsync.py, tests/test_zero3.py and tests/test_calibrate.py):
   * the :class:`HardwareParams` defaults (``z_claims_first=True``,
     ``cross_step_efficiency=1.0``) ⇒ the pre-calibration model bitwise —
     an uncalibrated run is unchanged. ``core/calibrate.py`` fits
-    measured replacements (``--calib`` on the CLIs).
+    measured replacements (``--calib`` on the CLIs);
+  * ``g_seq = 1`` ⇒ the 4-factor model bitwise, and ``g_expert = 1`` ⇒
+    the 5-factor model bitwise (tests/test_properties.py,
+    tests/test_expert_parallel.py): every new factor at its identity
+    value reproduces the previous model term for term.
 """
 from __future__ import annotations
 
@@ -77,6 +81,17 @@ class LayerShape:
     # projection, 0 elsewhere): with g_seq > 1 the ring circulates
     # m_local * kv_ring_width / g_y elements per hop, fwd and bwd
     kv_ring_width: float = 0.0
+    # expert-parallel markers: ``expert`` marks a routed-expert-bank
+    # layer (its weights shard over g_expert, so the z/DP weight buffers
+    # divide by it and its gradients need no expert-axis sync);
+    # ``a2a_width`` (set once per MoE block, on the up-projection) is
+    # the elements per token the capacity-based dispatch moves across
+    # the expert axis each direction (capacity_factor * top_k * d) —
+    # with g_expert > 1 the block pays 4 all_to_all passes of
+    # m_local * a2a_width / (g_x * g_y) elements (dispatch + combine,
+    # fwd + bwd)
+    expert: bool = False
+    a2a_width: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,17 +100,26 @@ class Decomposition:
     budget) defaults to 1 so every 4-factor caller is unchanged; it
     joins ``g`` but NOT ``g_tensor`` — the seq axis shards activations
     by token, not weights, so the min_tensor memory floor and the
-    paper's G_tensor-based closed forms see only x*y*z."""
+    paper's G_tensor-based closed forms see only x*y*z.
+
+    ``g_expert`` (expert parallelism, a 6th factor) likewise defaults
+    to 1 so every 5-factor caller reduces bitwise to today's model: it
+    shards the routed-expert bank of MoE layers AND the batch (dense
+    layers see it as a second data axis), and tokens cross it via the
+    capacity-based dispatch/combine all-to-all. Like ``g_seq`` it joins
+    ``g`` but not ``g_tensor`` — dense weights replicate over it."""
 
     g_data: int
     g_x: int
     g_y: int
     g_z: int
     g_seq: int = 1
+    g_expert: int = 1
 
     @property
     def g(self) -> int:
-        return self.g_data * self.g_x * self.g_y * self.g_z * self.g_seq
+        return (self.g_data * self.g_x * self.g_y * self.g_z * self.g_seq
+                * self.g_expert)
 
     @property
     def g_tensor(self) -> int:
@@ -120,6 +144,16 @@ def ring_exchange_volume(p: int, buf: float) -> float:
     return 0.0 if p <= 1 else (p - 1) * buf
 
 
+def all_to_all_volume(p: int, buf: float) -> float:
+    """All-to-all volume per participant: each rank keeps its own 1/p
+    block and exchanges the other (p-1)/p of its ``buf``-element
+    dispatch buffer — the MoE expert dispatch/combine geometry. Same
+    wire bytes whether spelled as one ``lax.all_to_all`` or the
+    ring-decomposed pairwise ppermute schedule (each block travels
+    exactly once either way)."""
+    return 0.0 if p <= 1 else (p - 1) / p * buf
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerGeometry:
     """Shared per-layer geometry of the volume and time models.
@@ -138,21 +172,29 @@ class LayerGeometry:
 
     gx: int
     gy: int
-    m_local: float         # tokens hitting this layer, per (data x z x seq)
+    m_local: float         # tokens hitting this layer, per (data x z x seq
+                           # x expert)
     ar_fwd_buf: float      # fwd partial-output all-reduce over gx (Eq. 2)
     ar_bwd_buf: float      # bwd dX all-reduce over gy (Eq. 3)
     w_full_per_xy: float   # z-collective buffer: full weight per x*y shard
     n_gathers: int         # AG_z count (1 when the bwd re-gather is cached)
     dp_buf: float          # DP gradient buffer per device (w / (x*y*z))
     seq_buf: float         # per-hop KV ring block (elements per seq-rank)
+    a2a_buf: float = 0.0   # expert dispatch buffer per rank (elements)
 
 
 def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
                    overlap: Optional[OverlapConfig] = None) -> LayerGeometry:
     gx, gy = (d.g_x, d.g_y) if not ls.transposed else (d.g_y, d.g_x)
-    m_local = tokens * ls.tokens_scale / (d.g_data * d.g_z * d.g_seq)
+    m_local = (tokens * ls.tokens_scale
+               / (d.g_data * d.g_z * d.g_seq * d.g_expert))
     cached = bool(overlap and overlap.cache_weight_gather)
     w_full_per_xy = ls.k * ls.n / (d.g_x * d.g_y)
+    if ls.expert:
+        # the routed-expert bank co-shards over g_expert: every weight
+        # buffer (and hence the z collectives and DP sync riding on it)
+        # shrinks by 1/g_expert
+        w_full_per_xy /= d.g_expert
     return LayerGeometry(
         gx=gx, gy=gy, m_local=m_local,
         ar_fwd_buf=m_local * ls.n / gy,
@@ -162,7 +204,12 @@ def layer_geometry(ls: LayerShape, tokens: int, d: Decomposition,
         dp_buf=w_full_per_xy / d.g_z,
         # KV heads shard over the layer's output axis (gy for the
         # untransposed QKV projection); the ring forwards this per hop
-        seq_buf=m_local * ls.kv_ring_width / gy)
+        seq_buf=m_local * ls.kv_ring_width / gy,
+        # per-rank dispatch buffer of the expert all-to-all: capacity
+        # slots for every expert of this y row — capacity_factor *
+        # top_k * m_local tokens of d/(gx*gy)-wide… folded into
+        # a2a_width = capacity_factor * top_k * d by the caller
+        a2a_buf=m_local * ls.a2a_width / (d.g_x * d.g_y))
 
 
 def dp_sync_volume(p: int, buf: float,
@@ -228,14 +275,22 @@ def layer_volume(ls: LayerShape, tokens: int, d: Decomposition, *,
     # seq-rank's KV block around the ring in the forward and its
     # gradients back in the backward — 2 ring_exchange passes
     v_seq = 2.0 * ring_exchange_volume(d.g_seq, g.seq_buf)
+    # expert-parallel token exchange (6th axis): dispatch + combine
+    # all-to-all in the forward, mirrored in the backward — 4 passes of
+    # the per-rank dispatch buffer
+    v_ex = 4.0 * all_to_all_volume(d.g_expert, g.a2a_buf)
     # data-parallel gradient sync (the text measures it as 1e-3 of the
     # tensor terms but we keep it for completeness); weight grads are
-    # additionally summed over seq (params replicate across it)
+    # additionally summed over seq (params replicate across it) and —
+    # for dense layers — over expert (the expert bank itself is sharded
+    # over g_expert, so its grads need no expert-axis sync)
     v_dp = 0.0
     if include_data_parallel:
         v_dp = dp_sync_volume(d.g_data, g.dp_buf, gradsync, microbatches)
         v_dp += allreduce_volume(d.g_seq, g.dp_buf)
-    return ls.count * (v_fp + v_bp + v_z + v_seq + v_dp)
+        if not ls.expert:
+            v_dp += allreduce_volume(d.g_expert, g.dp_buf)
+    return ls.count * (v_fp + v_bp + v_z + v_seq + v_ex + v_dp)
 
 
 def model_volume(layers: Sequence[LayerShape], tokens: int, d: Decomposition,
@@ -362,6 +417,13 @@ def collective_time(kind: str, p: int, buf: float,
         # the same hop count, which is why it has its own α-β-γ class
         # in core/calibrate.py rather than reusing the gather fit
         vol, steps = ring_exchange_volume(p, buf), p - 1
+    elif kind == "all_to_all":
+        # expert dispatch/combine: (p-1)/p of the buffer crosses the
+        # wire (each rank keeps its own block), in p-1 pairwise
+        # exchanges under the ring decomposition — AG/RS wire geometry,
+        # but its own fitted class (the pairwise pattern stresses
+        # links differently than a hop chain; core/calibrate.py)
+        vol, steps = all_to_all_volume(p, buf), p - 1
     else:
         raise ValueError(f"unknown collective kind {kind!r}")
     return (hw.gamma + hw.alpha * steps
@@ -500,6 +562,14 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     t_seq = 2.0 * collective_time("ring_exchange", d.g_seq, g.seq_buf, hw)
     t_seq_grad = (collective_time("all_reduce", d.g_seq, g.dp_buf, hw)
                   if include_data_parallel else 0.0)
+    # expert-axis token exchange (dispatch + combine, fwd + bwd) and
+    # the dense-layer grad all-reduce over expert (the expert bank is
+    # sharded over the axis; dense params replicate and sync like a
+    # second DP pass — step-end, never hideable)
+    t_ex = (4.0 * collective_time("all_to_all", d.g_expert, g.a2a_buf, hw)
+            if ls.a2a_width > 0 else 0.0)
+    t_ex_grad = (collective_time("all_reduce", d.g_expert, g.dp_buf, hw)
+                 if include_data_parallel and not ls.expert else 0.0)
     t_dp = dp_hideable = 0.0
     if include_data_parallel:
         t_dp, dp_hideable = dp_sync_time(d.g_data, g.dp_buf, gradsync,
@@ -510,10 +580,15 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
     # hop i+1's KV permute issues before hop i's partial attention
     # (layers/attention.py seq_attn), so the ring rides the attention
     # compute itself — it claims the window after z and the activation
-    # ARs (claim order z -> AR -> seq -> DP, the same measured-window
-    # discipline as the rest)
+    # ARs (claim order z -> AR -> seq -> expert a2a -> DP, the same
+    # measured-window discipline as the rest)
     want_seq = (overlap is not None and overlap.ring_attention
                 and d.g_seq > 1 and ls.kv_ring_width > 0)
+    # the ring-decomposed a2a's pairwise exchanges interleave with the
+    # per-source expert GEMMs (collective_matmul.ring_a2a_expert), so
+    # it hides in whatever window the earlier claims left
+    want_ex = (overlap is not None and overlap.expert_a2a
+               and d.g_expert > 1 and ls.a2a_width > 0)
     # window claim order: z weight rings first by default (they pipeline
     # against the very GEMM that consumes/produces the weight);
     # hw.z_claims_first=False swaps it — calibrate.overlap_probe measures
@@ -526,10 +601,15 @@ def layer_time(ls: LayerShape, tokens: int, d: Decomposition,
         hidden_z = min(t_z, window - hidden_ar) if want_z else 0.0
     hidden_seq = (min(t_seq, max(window - hidden_z - hidden_ar, 0.0))
                   if want_seq else 0.0)
+    hidden_ex = (min(t_ex, max(window - hidden_z - hidden_ar - hidden_seq,
+                               0.0))
+                 if want_ex else 0.0)
     hidden_dp = min(dp_hideable,
-                    max(window - hidden_z - hidden_ar - hidden_seq, 0.0))
-    hidden = hidden_z + hidden_ar + hidden_seq + hidden_dp
-    exposed = t_act + t_z + t_seq + t_seq_grad + t_dp - hidden
+                    max(window - hidden_z - hidden_ar - hidden_seq
+                        - hidden_ex, 0.0))
+    hidden = hidden_z + hidden_ar + hidden_seq + hidden_ex + hidden_dp
+    exposed = (t_act + t_z + t_seq + t_seq_grad + t_ex + t_ex_grad + t_dp
+               - hidden)
     return StepTime(ls.count * t_compute, ls.count * exposed,
                     ls.count * hidden)
 
@@ -682,6 +762,11 @@ class Constraints:
     # dims g_seq must divide (the sequence length)
     max_seq: int = 1
     seq_divides: Tuple[int, ...] = ()
+    # expert parallelism: largest g_expert the search may use (1, the
+    # default, keeps the 5-factor enumeration byte-identical) and the
+    # dims g_expert must divide (the routed expert count)
+    max_expert: int = 1
+    expert_divides: Tuple[int, ...] = ()
 
 
 def enumerate_decompositions(g: int, c: Constraints = Constraints()
@@ -695,25 +780,34 @@ def enumerate_decompositions(g: int, c: Constraints = Constraints()
                 for g_seq in _divisors(rem3):
                     if g_seq > max(c.max_seq, 1):
                         continue
-                    g_y = rem3 // g_seq
-                    d = Decomposition(g_data, g_x, g_y, g_z, g_seq)
-                    if d.g_tensor < c.min_tensor:
-                        continue
-                    if c.global_batch and c.global_batch % (g_data * g_z):
-                        continue
-                    if c.max_x and g_x > c.max_x:
-                        continue
-                    if c.max_y and g_y > c.max_y:
-                        continue
-                    if any(dim % g_x for dim in c.x_divides):
-                        continue
-                    if any(dim % g_y for dim in c.y_divides):
-                        continue
-                    if any(dim % g_z for dim in c.z_divides):
-                        continue
-                    if any(dim % g_seq for dim in c.seq_divides):
-                        continue
-                    yield d
+                    rem4 = rem3 // g_seq
+                    for g_expert in _divisors(rem4):
+                        if g_expert > max(c.max_expert, 1):
+                            continue
+                        g_y = rem4 // g_expert
+                        d = Decomposition(g_data, g_x, g_y, g_z, g_seq,
+                                          g_expert)
+                        if d.g_tensor < c.min_tensor:
+                            continue
+                        # the batch shards over data x z x expert
+                        if c.global_batch and c.global_batch % (
+                                g_data * g_z * g_expert):
+                            continue
+                        if c.max_x and g_x > c.max_x:
+                            continue
+                        if c.max_y and g_y > c.max_y:
+                            continue
+                        if any(dim % g_x for dim in c.x_divides):
+                            continue
+                        if any(dim % g_y for dim in c.y_divides):
+                            continue
+                        if any(dim % g_z for dim in c.z_divides):
+                            continue
+                        if any(dim % g_seq for dim in c.seq_divides):
+                            continue
+                        if any(dim % g_expert for dim in c.expert_divides):
+                            continue
+                        yield d
 
 
 def optimize_decomposition(layers: Sequence[LayerShape], tokens: int, g: int,

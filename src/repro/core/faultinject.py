@@ -19,6 +19,11 @@ every other token is ``<kind>@<step>[:k=v,k=v...]``:
     the in-memory snapshot; ``via=ckpt`` forces the checkpoint-restore
     path first (falling back to the snapshot if the file is corrupt).
 
+``rank_recover@S``
+    Before step S, clear all failure marks (the lost devices came back
+    or were replaced): the recovery loop snapshots, re-shards, and grows
+    ``g_data`` back to the full pool — the elastic *grow* path.
+
 ``ckpt_corrupt@S``
     Before step S, corrupt the run's checkpoint file in place:
     ``mode=bitflip`` (default) flips one byte inside a deterministically
@@ -44,7 +49,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-KINDS = ("rank_loss", "ckpt_corrupt", "timeout")
+KINDS = ("rank_loss", "rank_recover", "ckpt_corrupt", "timeout")
 
 
 class RankLossError(RuntimeError):

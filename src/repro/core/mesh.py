@@ -15,12 +15,19 @@ The paper decomposes ``G`` devices as ``G_data x G_x x G_y x G_z``:
     activations in a striped layout (seq-rank r holds global positions
     r, r+p, r+2p, ... — the causal load-balancing stripe); weights stay
     replicated over ``seq`` and attention runs as a KV ``ppermute`` ring
-    (layers/attention.py).
+    (layers/attention.py),
+  * ``expert`` — expert parallelism: shards the routed-expert bank of
+    MoE layers (layers/moe.py) AND the batch dim (dense layers see it as
+    a second data axis); tokens cross it via the capacity-based
+    dispatch/combine all-to-all, ring-decomposed into pairwise
+    ``ppermute`` exchanges when ``OverlapConfig.expert_a2a`` is on
+    (core/collective_matmul.py).
 
 Setting ``z=None`` (G_z=1) recovers the supplied Tensor3D text verbatim;
 setting additionally ``y=None`` recovers Megatron-LM 1D tensor
 parallelism. ``seq=None`` (G_seq=1, the default) recovers the 4D model
-of PRs 1-5 bitwise.
+of PRs 1-5 bitwise, and ``expert=None`` (G_expert=1, the default) the
+5-axis model of PRs 6-9 bitwise.
 
 Everything in :mod:`repro.layers` is written against :class:`MeshAxes`, so
 the same model code runs on the assignment-mandated ``("data","model")``
@@ -61,6 +68,9 @@ class MeshAxes:
     z: AxisName = "z"
     # context parallelism (None == unsharded sequence, the 4D model)
     seq: AxisName = None
+    # expert parallelism (None == experts sharded over y only, the
+    # 5-axis model)
+    expert: AxisName = None
     # static sizes, captured from the physical mesh at bind time
     sizes: Tuple[Tuple[str, int], ...] = ()
     # comm/compute-overlap knobs for the tp primitives (core/overlap.py);
@@ -93,13 +103,17 @@ class MeshAxes:
         return self.size(self.seq)
 
     @property
+    def gexpert(self) -> int:
+        return self.size(self.expert)
+
+    @property
     def tensor(self) -> int:
         return self.gx * self.gy * self.gz
 
     @property
     def batch_shards(self) -> int:
-        """How many ways the global batch is split (data x z)."""
-        return self.dp * self.gz
+        """How many ways the global batch is split (data x z x expert)."""
+        return self.dp * self.gz * self.gexpert
 
     @property
     def token_shards(self) -> int:
@@ -108,17 +122,19 @@ class MeshAxes:
 
     def axis(self, logical: str) -> AxisName:
         return {"data": self.data, "x": self.x, "y": self.y, "z": self.z,
-                "seq": self.seq}[logical]
+                "seq": self.seq, "expert": self.expert}[logical]
 
     def all_names(self) -> Tuple[str, ...]:
         out: Tuple[str, ...] = ()
-        for a in (self.data, self.x, self.y, self.z, self.seq):
+        for a in (self.data, self.x, self.y, self.z, self.seq, self.expert):
             out += _names(a)
         return out
 
     def batch_axes(self) -> Tuple[str, ...]:
-        """Mesh axes the batch dim is sharded over (data then z)."""
-        return _names(self.data) + _names(self.z)
+        """Mesh axes the batch dim is sharded over (data, z, then expert
+        — dense layers see the expert axis as a second data axis; MoE
+        layers re-gather its tokens via the dispatch all-to-all)."""
+        return _names(self.data) + _names(self.z) + _names(self.expert)
 
     def token_axes(self) -> Tuple[str, ...]:
         """Mesh axes the token grid is sharded over (batch + seq) — the
@@ -148,7 +164,7 @@ class MeshAxes:
 
 def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
               y: AxisName = None, z: AxisName = None,
-              seq: AxisName = None) -> MeshAxes:
+              seq: AxisName = None, expert: AxisName = None) -> MeshAxes:
     """Bind logical 4D axes to a physical mesh, validating names.
 
     Tuple axes must list their names in mesh-axis order: the flattened
@@ -159,7 +175,7 @@ def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
     sizes = tuple(zip(mesh.axis_names, mesh.devices.shape))
     known = dict(sizes)
     order = {name: i for i, name in enumerate(mesh.axis_names)}
-    for a in (data, x, y, z, seq):
+    for a in (data, x, y, z, seq, expert):
         n = _names(a)
         for name in n:
             if name not in known:
@@ -170,7 +186,8 @@ def bind_axes(mesh: Mesh, *, data: AxisName, x: AxisName = None,
             raise ValueError(
                 f"tuple axis {n!r} must list names in mesh-axis order "
                 f"{mesh.axis_names} (ring collectives linearize by it)")
-    return MeshAxes(data=data, x=x, y=y, z=z, seq=seq, sizes=sizes)
+    return MeshAxes(data=data, x=x, y=y, z=z, seq=seq, expert=expert,
+                    sizes=sizes)
 
 
 # ---------------------------------------------------------------------- #
@@ -353,6 +370,58 @@ def ring_all_reduce(v, axis: AxisName, *, dim: int = -1):
     with trace.scope("ring_ar", axis):
         return ring_all_gather(ring_reduce_scatter(v, axis, dim=dim), axis,
                                dim=dim)
+
+
+def all_to_all(v, axis: AxisName, *, dim: int = 0):
+    """Blocking all-to-all over ``axis``: ``dim`` (p equal blocks, block
+    k destined for rank k) is exchanged so the result's block k holds
+    what rank k sent here — the MoE dispatch/combine primitive
+    (layers/moe.py). Identity on unmapped/size-1 axes."""
+    n = _names(axis)
+    if not n:
+        return v
+    p, axn = flat_ring_axis(axis)
+    if p == 1:
+        return v
+    dim = dim % v.ndim
+    with trace.scope("a2a", axis):
+        return jax.lax.all_to_all(v, axn, split_axis=dim, concat_axis=dim,
+                                  tiled=True)
+
+
+def ring_all_to_all(v, axis: AxisName, *, dim: int = 0):
+    """:func:`all_to_all` decomposed into p-1 pairwise ``ppermute``
+    exchanges (shift s moves each rank's block destined s hops ahead
+    directly there), so no all-to-all op reaches the HLO and XLA's
+    latency-hiding scheduler can interleave the permutes with unrelated
+    compute — the same schedule family as the z/AR rings. Bitwise the
+    same block layout as the blocking path (each block travels exactly
+    once either way); falls back to the blocking :func:`all_to_all` when
+    ``dim`` does not split evenly over the group. Identity on
+    unmapped/size-1 axes."""
+    n = _names(axis)
+    if not n:
+        return v
+    p, axn = flat_ring_axis(axis)
+    if p == 1:
+        return v
+    dim = dim % v.ndim
+    if v.shape[dim] % p:
+        return all_to_all(v, axis, dim=dim)   # blocking fallback
+    idx = flat_ring_index(axis)
+    chunk = v.shape[dim] // p
+    own = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=dim)
+    out = jnp.zeros_like(v)
+    out = jax.lax.dynamic_update_slice_in_dim(out, own, idx * chunk,
+                                              axis=dim)
+    for s in range(1, p):
+        with trace.scope("ring_a2a", axis, f"shift{s}"):
+            send = jax.lax.dynamic_slice_in_dim(
+                v, ((idx + s) % p) * chunk, chunk, axis=dim)
+            recv = jax.lax.ppermute(send, axn, ring_perm(p, s))
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, recv, ((idx - s) % p) * chunk, axis=dim)
+    return out
 
 
 def stripe_seq(v, p: int, *, dim: int = 1):

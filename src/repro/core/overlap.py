@@ -91,6 +91,14 @@ class OverlapConfig:
     (``parallel.embedding_lookup``) into ``ppermute`` hops —
     ``mesh.ring_all_gather`` is bitwise the blocking gather, so this
     only changes exposure, never values.
+
+    expert_a2a: ring-decompose the MoE dispatch/combine all-to-all over
+    the ``expert`` mesh axis into pairwise ``ppermute`` exchanges
+    interleaved with the per-source expert GEMMs
+    (``collective_matmul.ring_a2a_expert``), so the token exchange hides
+    under expert compute. Off keeps the blocking ``lax.all_to_all``
+    schedule. Inert when the expert axis is unmapped (g_expert = 1: both
+    paths reduce to the within-y dispatch, bit for bit).
     """
 
     matmul: bool = False
@@ -102,6 +110,7 @@ class OverlapConfig:
     cache_weight_gather: bool = False
     ring_attention: bool = False
     embed_gather: bool = False
+    expert_a2a: bool = False
 
     def __post_init__(self):
         if self.z_chunks < 1:
@@ -113,7 +122,7 @@ class OverlapConfig:
     def any_enabled(self) -> bool:
         return (self.matmul or self.batched_matmul or self.tied_logits
                 or self.all_reduce or self.ring_attention
-                or self.embed_gather)
+                or self.embed_gather or self.expert_a2a)
 
     @classmethod
     def all_on(cls, *, z_chunks: int = 1, ar_chunks: int = 1,
@@ -121,4 +130,5 @@ class OverlapConfig:
         return cls(matmul=True, batched_matmul=True, tied_logits=True,
                    all_reduce=True, z_chunks=z_chunks, ar_chunks=ar_chunks,
                    cache_weight_gather=cache_weight_gather,
-                   ring_attention=True, embed_gather=True)
+                   ring_attention=True, embed_gather=True,
+                   expert_a2a=True)

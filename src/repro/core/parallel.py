@@ -334,12 +334,15 @@ def tp_expert_init(key, n_experts: int, k: int, n: int,
                    out_shard: Optional[str] = None, dtype=jnp.float32,
                    stack: Tuple[int, ...] = (),
                    abstract: bool = False) -> Boxed:
-    """Expert weight bank (E, k, n): E over y, k over in_shard,
-    n over (out_shard, z)."""
+    """Expert weight bank (E, k, n): E over (y, expert) — y-major,
+    expert-inner, so the layout reduces to today's y-only placement at
+    g_expert = 1 — k over in_shard, n over (out_shard, z)."""
     in_ax = _logical(axes, in_shard)
     out_names = M._names(_logical(axes, out_shard)) + M._names(axes.z)
+    e_names = M._names(axes.y) + M._names(axes.expert)
     spec = P(*([None] * len(stack)),
-             *axes.pspec(axes.y, in_ax, out_names if out_names else None))
+             *axes.pspec(e_names if e_names else None, in_ax,
+                         out_names if out_names else None))
     shape = (*stack, n_experts, k, n)
     if abstract:
         return Boxed(jax.ShapeDtypeStruct(shape, dtype), spec, z_reduced=True)

@@ -72,3 +72,35 @@ def z_reduce_grads(grads, specs, axes, psum_fn):
         return psum_fn(g, axes.z)
     return jax.tree.map(one, grads, specs,
                         is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def spec_names(s) -> Tuple[str, ...]:
+    """All mesh axis names a ParamSpec/PartitionSpec shards over."""
+    spec = s.spec if isinstance(s, ParamSpec) else s
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend(entry if isinstance(entry, (tuple, list)) else (entry,))
+    return tuple(out)
+
+
+def expert_reduce_grads(grads, specs, axes, psum_fn):
+    """psum grads over the expert axis for every param NOT sharded over
+    it. The expert axis is a second data axis for dense layers (each
+    expert-rank sees its own batch shard), so replicated params need
+    their grads summed like DP; the expert-bank weights are sharded over
+    the axis and each rank's grad already holds exactly its own experts'
+    contributions — summing them would be wrong, not just wasteful."""
+    names = set()
+    for n in (axes.expert if isinstance(axes.expert, tuple)
+              else (axes.expert,)):
+        if n is not None:
+            names.add(n)
+
+    def one(g, s):
+        if names & set(spec_names(s)):
+            return g
+        return psum_fn(g, axes.expert)
+    return jax.tree.map(one, grads, specs,
+                        is_leaf=lambda s: isinstance(s, ParamSpec))

@@ -203,7 +203,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
               zero: bool = False, zero3: bool = False,
               zero3_prefetch: bool = False, dp_bucket_mb: float = 4.0,
               objective: str = "auto", calib: str = "",
-              seq_parallel: bool = False, g_seq: int = 0):
+              seq_parallel: bool = False, g_seq: int = 0,
+              expert_parallel: bool = False, g_expert: int = 0):
     # chunk knobs only mean something on the ring paths; normalize so the
     # record (and the resume cache key built from it) never claims a
     # config the lowering didn't use
@@ -213,6 +214,11 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
     # chooser pick) only means something with --seq-parallel
     seq_parallel = seq_parallel and SHAPES[shape_name].kind == "train"
     g_seq = g_seq if seq_parallel else 0
+    # expert parallelism is a train-path knob and needs an MoE arch
+    expert_parallel = (expert_parallel
+                       and SHAPES[shape_name].kind == "train"
+                       and get_config(arch).moe is not None)
+    g_expert = g_expert if expert_parallel else 0
     zero = zero and not zero3          # zero3 supersedes the ZeRO-1 path
     zero3_prefetch = zero3_prefetch if zero3 else False
     dp_bucket_mb = dp_bucket_mb if (zero or zero3) else 0.0
@@ -244,7 +250,9 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
                                      pods=2 if multi_pod else 1,
                                      overlap=ov if overlap else None,
                                      objective=objective, hw=hw,
-                                     seq_parallel=seq_parallel, g_seq=g_seq)
+                                     seq_parallel=seq_parallel, g_seq=g_seq,
+                                     expert_parallel=expert_parallel,
+                                     g_expert=g_expert)
         mesh = LM.make_production_mesh_4d(*factors, multi_pod=multi_pod)
         axes = LM.bind_4d(mesh)
     cfg.validate_axes(axes)
@@ -328,10 +336,14 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, *,
         "multi_pod": multi_pod, "devices": int(n_dev),
         "factors": {"g_data": factors[0], "g_x": factors[1],
                     "g_y": factors[2], "g_z": factors[3],
-                    "g_seq": factors[4] if len(factors) > 4 else 1},
+                    "g_seq": factors[4] if len(factors) > 4 else 1,
+                    "g_expert": factors[5] if len(factors) > 5 else 1},
         "seq_parallel": seq_parallel,
         "g_seq": int(factors[4]) if len(factors) > 4 else 1,
         "g_seq_req": g_seq,   # the requested pin (0 = auto) — resume key
+        "expert_parallel": expert_parallel,
+        "g_expert": int(factors[5]) if len(factors) > 5 else 1,
+        "g_expert_req": g_expert,
         "overdecompose": overdecompose,
         "remat_policy": remat_policy, "cache_gather": cache_gather,
         "overlap": overlap, "z_chunks": z_chunks, "ar_chunks": ar_chunks,
@@ -360,13 +372,17 @@ def _feasible(cfg, factors, multi_pod=False):
 def choose_factors(cfg, shape, pods: int = 1,
                    overlap: OverlapConfig = None,
                    objective: str = "auto", hw=None,
-                   seq_parallel: bool = False, g_seq: int = 0):
-    """Communication-model-optimal (g_data, g_x, g_y, g_z, g_seq) for
-    this pair.
+                   seq_parallel: bool = False, g_seq: int = 0,
+                   expert_parallel: bool = False, g_expert: int = 0):
+    """Communication-model-optimal (g_data, g_x, g_y, g_z, g_seq,
+    g_expert) for this pair.
 
     With ``seq_parallel`` the enumeration opens the 5th (context) factor
     — ``g_seq`` jointly chosen with the others by the same objective
     (the KV ring_exchange class prices it), or pinned when ``g_seq`` > 0.
+    ``expert_parallel`` opens the 6th (expert) factor the same way: the
+    all_to_all class prices the MoE dispatch/combine, ``g_expert`` > 0
+    pins it.
 
     ``objective='auto'`` (the default) ranks by the α-β overlap-aware
     ``predict_step_time`` whenever ``overlap`` is set (ring-hidden z
@@ -397,13 +413,22 @@ def choose_factors(cfg, shape, pods: int = 1,
     max_seq_f = 1
     if seq_parallel and shape.kind == "train":
         max_seq_f = g_seq if g_seq > 0 else sh.seq_len
+    # expert parallelism is likewise train-only and needs an MoE config
+    # (g_expert must divide the expert count; the y co-divisibility is
+    # caught by the _feasible probe)
+    max_expert_f = 1
+    if expert_parallel and shape.kind == "train" and cfg.moe is not None:
+        max_expert_f = g_expert if g_expert > 0 else cfg.moe.n_experts
     cons = CM.Constraints(global_batch=cons.global_batch,
                           x_divides=cons.x_divides,
                           y_divides=cons.y_divides,
                           z_divides=z_div,
                           min_tensor=_min_tensor(cfg, shape),
                           max_seq=max_seq_f,
-                          seq_divides=(sh.seq_len,) if max_seq_f > 1 else ())
+                          seq_divides=(sh.seq_len,) if max_seq_f > 1 else (),
+                          max_expert=max_expert_f,
+                          expert_divides=(cfg.moe.n_experts,)
+                          if max_expert_f > 1 else ())
     # tokens processed per step: full sequence for train AND prefill
     # (a prefill forward is one fwd pass over B*S tokens); decode is one
     # token per sequence. (Mis-pricing prefill as B tokens made the model
@@ -422,7 +447,7 @@ def choose_factors(cfg, shape, pods: int = 1,
         obj = dict(objective="time", overlap=overlap, hw=hw)
     ranked = CM.optimize_decomposition(
         list(cfg.comm_layers()), tokens, 256, cons,
-        top_k=64 if max_seq_f <= 1 else 512,
+        top_k=64 if max_seq_f <= 1 and max_expert_f <= 1 else 512,
         include_data_parallel=(shape.kind == "train"), **obj)
     if g_seq > 0:
         pinned = [t for t in ranked if t[0].g_seq == g_seq]
@@ -431,12 +456,19 @@ def choose_factors(cfg, shape, pods: int = 1,
                 f"no feasible decomposition with g_seq={g_seq} for "
                 f"{cfg.name} x {shape.name}")
         ranked = pinned
+    if g_expert > 0 and max_expert_f > 1:
+        pinned = [t for t in ranked if t[0].g_expert == g_expert]
+        if not pinned:
+            raise ValueError(
+                f"no feasible decomposition with g_expert={g_expert} for "
+                f"{cfg.name} x {shape.name}")
+        ranked = pinned
     for d, _ in ranked:
-        f = (d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq)
+        f = (d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq, d.g_expert)
         if _feasible(cfg, f, multi_pod=(pods > 1)):
             return f
     d = ranked[0][0]
-    return d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq
+    return d.g_data, d.g_x, d.g_y, d.g_z, d.g_seq, d.g_expert
 
 
 def _min_tensor(cfg, shape) -> int:
@@ -511,6 +543,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="pin the seq factor (with --seq-parallel; "
                          "0 = let the communication model choose it "
                          "jointly with g_data/g_x/g_y/g_z)")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="expert parallelism: open the 6th (expert) mesh "
+                         "factor — the MoE expert bank shards over it and "
+                         "dispatch/combine runs as an all-to-all priced "
+                         "by the communication model (MoE train shapes "
+                         "only)")
+    ap.add_argument("--g-expert", type=int, default=0,
+                    help="pin the expert factor (with --expert-parallel; "
+                         "0 = let the communication model choose it "
+                         "jointly with the other factors)")
     ap.add_argument("--objective", default="auto",
                     choices=["auto", "time", "volume"],
                     help="factor-chooser objective: auto = the α-β "
@@ -546,6 +588,7 @@ def main():
     zero3_prefetch = args.zero3_prefetch if args.zero3 else False
     dp_bucket_mb = args.dp_bucket_mb if (zero or args.zero3) else 0.0
     g_seq_arg = args.g_seq if args.seq_parallel else 0
+    g_expert_arg = args.g_expert if args.expert_parallel else 0
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
@@ -566,7 +609,9 @@ def main():
                               r.get("objective", "auto"),
                               r.get("calib", ""),
                               r.get("seq_parallel", False),
-                              r.get("g_seq_req", 0)))
+                              r.get("g_seq_req", 0),
+                              r.get("expert_parallel", False),
+                              r.get("g_expert_req", 0)))
                 except Exception:
                     pass
 
@@ -582,7 +627,8 @@ def main():
                            args.overlap, z_chunks, ar_chunks,
                            zero, args.zero3, zero3_prefetch, dp_bucket_mb,
                            args.objective, args.calib,
-                           args.seq_parallel, g_seq_arg)
+                           args.seq_parallel, g_seq_arg,
+                           args.expert_parallel, g_expert_arg)
                     if key in done:
                         print(f"cached {key}")
                         continue
@@ -602,6 +648,8 @@ def main():
                             objective=args.objective, calib=args.calib,
                             seq_parallel=args.seq_parallel,
                             g_seq=g_seq_arg,
+                            expert_parallel=args.expert_parallel,
+                            g_expert=g_expert_arg,
                             probe=not args.no_probe)
                         r = rec["roofline"]
                         print(f"  ok compile={rec['compile_s']}s "
@@ -626,6 +674,8 @@ def main():
                                "calib": args.calib,
                                "seq_parallel": args.seq_parallel,
                                "g_seq_req": g_seq_arg,
+                               "expert_parallel": args.expert_parallel,
+                               "g_expert_req": g_expert_arg,
                                "error": f"{type(e).__name__}: {e}",
                                "traceback": traceback.format_exc()[-2000:]}
                         print(f"  FAILED: {type(e).__name__}: {e}")

@@ -11,7 +11,7 @@ paper's own baseline.
 default to the communication-model optimum for the given architecture.
 
 ``MeshLifecycle`` wraps the same factories in an elastic lifecycle:
-device discovery, 5-factor binding, failure tracking, and online
+device discovery, 6-factor binding, failure tracking, and online
 re-sharding of the data axis between steps (grow/shrink ``g_data``
 without a process restart — docs/fault_tolerance.md).
 
@@ -64,12 +64,14 @@ def bind_production(mesh, cfg=None) -> M.MeshAxes:
 
 
 def make_production_mesh_4d(g_data: int, g_x: int, g_y: int, g_z: int,
-                            g_seq: int = 1, *, multi_pod: bool = False):
-    """(pod,) data x x x y x z (x seq) with the same device counts
-    (256 / 512). ``g_seq`` joins the product (context parallelism is a
-    5th factor of the same budget) and only appears as a mesh axis when
-    > 1, so every 4-factor caller keeps its exact old mesh."""
-    per_pod = g_data * g_x * g_y * g_z * g_seq
+                            g_seq: int = 1, g_expert: int = 1, *,
+                            multi_pod: bool = False):
+    """(pod,) data x x x y x z (x seq) (x expert) with the same device
+    counts (256 / 512). ``g_seq`` and ``g_expert`` join the product
+    (context and expert parallelism are 5th/6th factors of the same
+    budget) and only appear as mesh axes when > 1, so every 4-factor
+    caller keeps its exact old mesh."""
+    per_pod = g_data * g_x * g_y * g_z * g_seq * g_expert
     assert per_pod == 256, \
         f"4D factors must multiply to 256 per pod, got {per_pod}"
     shape: Tuple[int, ...] = (g_data, g_x, g_y, g_z)
@@ -77,6 +79,9 @@ def make_production_mesh_4d(g_data: int, g_x: int, g_y: int, g_z: int,
     if g_seq > 1:
         shape += (g_seq,)
         names += ("seq",)
+    if g_expert > 1:
+        shape += (g_expert,)
+        names += ("expert",)
     if multi_pod:
         return _mk((2,) + shape, ("pod",) + names)
     return _mk(shape, names)
@@ -84,10 +89,12 @@ def make_production_mesh_4d(g_data: int, g_x: int, g_y: int, g_z: int,
 
 def bind_4d(mesh) -> M.MeshAxes:
     seq = "seq" if "seq" in mesh.axis_names else None
+    expert = "expert" if "expert" in mesh.axis_names else None
     if "pod" in mesh.axis_names:
         return M.bind_axes(mesh, data=("pod", "data"), x="x", y="y", z="z",
-                           seq=seq)
-    return M.bind_axes(mesh, data=("data",), x="x", y="y", z="z", seq=seq)
+                           seq=seq, expert=expert)
+    return M.bind_axes(mesh, data=("data",), x="x", y="y", z="z", seq=seq,
+                       expert=expert)
 
 
 def make_smoke_mesh(shape: Tuple[int, ...] = (2, 2, 2, 1),
@@ -115,7 +122,7 @@ class ElasticState:
 
 
 class MeshLifecycle:
-    """Owns the device pool and the 5-factor mesh across a run's life.
+    """Owns the device pool and the 6-factor mesh across a run's life.
 
     States::
 
@@ -124,7 +131,8 @@ class MeshLifecycle:
         any --stop()--> stopped
 
     The lifecycle only ever changes **g_data**: the tensor factors
-    (g_x, g_y, g_z, g_seq) shard *within* a model replica, so losing a
+    (g_x, g_y, g_z, g_seq, g_expert) shard *within* a model replica
+    (the expert axis holds a share of the expert bank), so losing a
     rank of a replica kills the whole replica — the natural elastic
     move is dropping (or re-adding) data-parallel replicas.
     :meth:`replan` picks the largest ``g_data`` that fits the surviving
@@ -143,9 +151,11 @@ class MeshLifecycle:
     STATES = ("init", "active", "degraded", "resharding", "stopped")
 
     def __init__(self, g_data: int, g_x: int, g_y: int, g_z: int,
-                 g_seq: int = 1, *, devices: Optional[Sequence] = None):
+                 g_seq: int = 1, g_expert: int = 1, *,
+                 devices: Optional[Sequence] = None):
         self.g_data, self.g_x, self.g_y, self.g_z, self.g_seq = \
             int(g_data), int(g_x), int(g_y), int(g_z), int(g_seq)
+        self.g_expert = int(g_expert)
         self._devices = list(devices) if devices is not None else None
         self._failed: set = set()            # device ids marked lost
         self.state = "init"
@@ -171,18 +181,20 @@ class MeshLifecycle:
         return tuple(sorted(self._failed))
 
     @property
-    def factors(self) -> Tuple[int, int, int, int, int]:
-        return (self.g_data, self.g_x, self.g_y, self.g_z, self.g_seq)
+    def factors(self) -> Tuple[int, int, int, int, int, int]:
+        return (self.g_data, self.g_x, self.g_y, self.g_z, self.g_seq,
+                self.g_expert)
 
     @property
     def required(self) -> int:
-        return self.g_data * self.g_x * self.g_y * self.g_z * self.g_seq
+        return (self.g_data * self.g_x * self.g_y * self.g_z * self.g_seq
+                * self.g_expert)
 
     @property
     def tensor(self) -> int:
         """Devices per model replica (the factors a rank loss cannot
         shrink)."""
-        return self.g_x * self.g_y * self.g_z * self.g_seq
+        return self.g_x * self.g_y * self.g_z * self.g_seq * self.g_expert
 
     def _event(self, event: str, **kw) -> None:
         self.log.append(dict(event=event, state=self.state,
@@ -208,6 +220,9 @@ class MeshLifecycle:
         if self.g_seq > 1:
             shape += (self.g_seq,)
             names += ("seq",)
+        if self.g_expert > 1:
+            shape += (self.g_expert,)
+            names += ("expert",)
         if not self._failed and need == len(self.devices) \
                 and self._devices is not None:
             # intact pool covering every device: the legacy factory path,
@@ -261,19 +276,22 @@ class MeshLifecycle:
 
         Feasible means ``g_data x tensor <= surviving`` and — when
         ``global_batch`` is given — the overdecompose divisibility rule
-        holds: ``global_batch % (g_data x g_z x overdecompose) == 0``
-        (each data x z batch shard splits into ``overdecompose``
-        microbatches; ``core.overdecompose.split_batch``)."""
+        holds: ``global_batch % (g_data x g_z x g_expert x
+        overdecompose) == 0`` (each data x z x expert batch shard splits
+        into ``overdecompose`` microbatches;
+        ``core.overdecompose.split_batch``)."""
         cap = len(self.surviving) // self.tensor
         if cap < 1:
             raise RuntimeError(
                 f"{len(self.surviving)} surviving devices cannot hold one "
-                f"model replica (tensor factors x*y*z*seq = {self.tensor})")
+                f"model replica (tensor factors x*y*z*seq*expert = "
+                f"{self.tensor})")
         for gd in range(cap, 0, -1):
-            shards = gd * self.g_z * overdecompose
+            shards = gd * self.g_z * self.g_expert * overdecompose
             if global_batch is None or global_batch % shards == 0:
                 return dict(g_data=gd, g_x=self.g_x, g_y=self.g_y,
-                            g_z=self.g_z, g_seq=self.g_seq)
+                            g_z=self.g_z, g_seq=self.g_seq,
+                            g_expert=self.g_expert)
         raise RuntimeError(
             f"no g_data in 1..{cap} divides global batch {global_batch} "
             f"by g_data x g_z({self.g_z}) x overdecompose({overdecompose})")

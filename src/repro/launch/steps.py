@@ -24,8 +24,8 @@ from repro.core import parallel as PP
 from repro.core.gradsync import GradSyncConfig
 from repro.core.overdecompose import split_batch
 from repro.core.overlap import OverlapConfig
-from repro.core.partition import ParamSpec, spec_tree_to_pspecs, unbox, \
-    z_reduce_grads
+from repro.core.partition import ParamSpec, expert_reduce_grads, \
+    spec_tree_to_pspecs, unbox, z_reduce_grads
 from repro.models import decoder as D
 from repro.models import encdec as ED
 from repro.models.base import ArchConfig
@@ -180,6 +180,11 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
     structs, specs = init_model(cfg, axes, abstract=True, dtype=opts.dtype)
     pspecs = spec_tree_to_pspecs(specs)
     gs = opts.gradsync
+    if axes.gexpert > 1 and gs.enabled:
+        raise NotImplementedError(
+            "expert parallelism with sharded grad sync (--zero/--zero3/"
+            "stream) is not wired yet: the bucket shards lose the "
+            "per-param specs the expert-axis reduction needs")
     pstream = None
     if gs.zero3:
         if cfg.arch_type == "audio":
@@ -264,6 +269,12 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, axes: M.MeshAxes,
                 shards = [M.psum(s, axes.seq) for s in shards]
             elif grads is not None:
                 grads = jax.tree.map(lambda g: M.psum(g, axes.seq), grads)
+
+        if axes.gexpert > 1 and grads is not None:
+            # expert is a second data axis for dense params (sum like DP)
+            # but shards the expert bank (each rank's grad already holds
+            # exactly its own experts' contributions): spec-aware
+            grads = expert_reduce_grads(grads, specs, axes, M.psum)
 
         if gs.zero3:
             if shards is None:

@@ -82,7 +82,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=3e-4,
                     help="peak AdamW learning rate")
     ap.add_argument("--mesh", default="2,2,2,1",
-                    help="g_data,g_x,g_y,g_z over host devices")
+                    help="g_data,g_x,g_y,g_z[,g_seq[,g_expert]] over "
+                         "host devices (5th/6th factors: context / "
+                         "expert parallelism)")
     ap.add_argument("--overdecompose", type=int, default=2,
                     help="microbatch count of the overdecompose loop")
     ap.add_argument("--zero", action="store_true",
@@ -132,6 +134,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "rank_loss@5:n=2,via=ckpt;ckpt_corrupt@4;"
                          "timeout@7:class=dp_rs_ag,secs=0.3'. rank_loss "
                          "shrinks g_data online via the mesh lifecycle; "
+                         "rank_recover returns the lost capacity and "
+                         "grows g_data back the same way; "
                          "ckpt_corrupt damages the --ckpt file in place; "
                          "timeout stalls one collective class so the "
                          "watchdog must classify the step")
@@ -346,6 +350,7 @@ def main():
 
         if injector is not None:
             rank_loss = None
+            rank_recover = None
             for ev in injector.events_at(step):
                 if ev.kind == "ckpt_corrupt":
                     target = args.ckpt or ""
@@ -370,6 +375,8 @@ def main():
                                         detail="skipped: no checkpoint")
                 elif ev.kind == "rank_loss":
                     rank_loss = ev
+                elif ev.kind == "rank_recover":
+                    rank_recover = ev
             if rank_loss is not None:
                 # ---- recovery: shrink the mesh, re-shard, continue ----
                 n = int(rank_loss.get("n", "1"))
@@ -397,6 +404,37 @@ def main():
                 if snap is None:
                     snap = ST.snapshot_state(params, state, tools, topts,
                                              step=step - 1)
+                es = life.reshard(cfg, topts, snap,
+                                  global_batch=args.batch)
+                mesh, axes, tools = es.mesh, es.axes, es.tools
+                params, state = es.params, es.opt_state
+                step_fn, _, _ = ST.make_train_step(cfg, mesh, axes, opt,
+                                                   topts)
+                if probes is not None:
+                    probes = PRB.CollectiveProbes(mesh, axes, calib_hw,
+                                                  injector=injector)
+                    watchdog = PRB.Watchdog(probes)
+                if telem is not None:
+                    telem.event(step, "resharded",
+                                generation=life.generation,
+                                g_data=life.g_data,
+                                devices=int(mesh.devices.size))
+                print(f"resharded: generation {life.generation}, mesh "
+                      f"{life.factors}, {mesh.devices.size} devices",
+                      flush=True)
+                step = snap["step"] + 1
+                done = 0  # the rebuilt step recompiles; re-warm timing
+                continue
+            if rank_recover is not None:
+                # ---- recovery: grow the mesh back, re-shard, continue --
+                print(f"chaos: rank_recover@{step}: failed capacity "
+                      f"returned, growing g_data back", flush=True)
+                if telem is not None:
+                    telem.event(step, "rank_recover",
+                                generation=life.generation)
+                life.mark_recovered()
+                snap = ST.snapshot_state(params, state, tools, topts,
+                                         step=step - 1)
                 es = life.reshard(cfg, topts, snap,
                                   global_batch=args.batch)
                 mesh, axes, tools = es.mesh, es.axes, es.tools

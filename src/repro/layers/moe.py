@@ -13,6 +13,19 @@ expert all-to-alls or full activation gathers.
 
 Dispatch is capacity-based with gather/scatter indexing (O(T*E_local)
 bookkeeping memory, no (T, E, C) one-hot tensor).
+
+Expert axis (g_expert > 1): the ``expert`` mesh axis shards the batch for
+every dense layer (a second data axis) and subdivides each y-rank's
+expert block — global expert ``e`` lives at y-rank ``e // (E/G_y)``,
+expert-rank ``(e % (E/G_y)) // e_local`` with ``e_local =
+E/(G_y*G_expert)`` (y-major, expert-inner, so the placement reduces to
+today's y-only layout at g_expert = 1). Tokens reach off-rank experts in
+their y block via a capacity-based dispatch buffer (g_expert, e_local,
+capacity, d) exchanged with ``jax.lax.all_to_all`` over the expert axis
+(combine is the reverse exchange); with ``OverlapConfig.expert_a2a`` the
+round trip runs as ``collective_matmul.ring_a2a_expert`` — pairwise
+ppermute exchanges interleaved with the per-source expert GEMMs, bitwise
+the blocking layout with zero all-to-all HLO ops.
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import collective_matmul as CMM
 from repro.core import mesh as M
 from repro.core import parallel as PP
 from repro.core.partition import Boxed
@@ -32,9 +46,9 @@ def moe_init(key, cfg, axes: M.MeshAxes, *, dtype=jnp.bfloat16, stack=(),
              abstract=False):
     mc = cfg.moe
     d, f = cfg.d_model, mc.d_expert
-    if mc.n_experts % axes.gy:
+    if mc.n_experts % (axes.gy * axes.gexpert):
         raise ValueError(f"{mc.n_experts} experts not divisible by "
-                         f"G_y={axes.gy}")
+                         f"G_y*G_expert={axes.gy * axes.gexpert}")
     ks = jax.random.split(key, 4)
     gated = cfg.act != "squared_relu"
     up_n = 2 * f if gated else f
@@ -85,12 +99,15 @@ def _aux_losses(logits, idx, mc):
 
 
 def moe_apply(p, h, cfg, axes: M.MeshAxes):
-    """h: (B, T, d/x) replicated over y. Returns (out, aux_loss)."""
+    """h: (B, T, d/x) replicated over y, batch-sharded over (data, z,
+    expert). Returns (out, aux_loss)."""
     mc = cfg.moe
     B, T, dx = h.shape
     n_tok = B * T
-    e_local = mc.n_experts // axes.gy
-    e_start = M.axis_index(axes.y) * e_local
+    p_ex = axes.gexpert
+    e_block = mc.n_experts // axes.gy      # this y-rank's expert block
+    e_local = e_block // p_ex              # experts on this (y, ex) rank
+    y_start = M.axis_index(axes.y) * e_block
     gated = cfg.act != "squared_relu"
 
     hf = h.reshape(n_tok, dx)
@@ -102,40 +119,61 @@ def moe_apply(p, h, cfg, axes: M.MeshAxes):
     capacity = max(int(mc.capacity_factor * n_tok * mc.top_k
                        / mc.n_experts), 4)
 
-    # ---- gather-based dispatch to the y-local experts ------------------
-    local = idx - e_start                              # (n_tok, k)
-    ok = (local >= 0) & (local < e_local)
-    eflat = jnp.where(ok, local, e_local)              # e_local = "drop"
+    # ---- gather-based dispatch to the y-block's experts ----------------
+    local = idx - y_start                              # (n_tok, k)
+    ok = (local >= 0) & (local < e_block)
+    eflat = jnp.where(ok, local, e_block)              # e_block = "drop"
     # position of each (token, slot) within its expert queue
-    onehot = jax.nn.one_hot(eflat.reshape(-1), e_local + 1, dtype=jnp.int32)
+    onehot = jax.nn.one_hot(eflat.reshape(-1), e_block + 1, dtype=jnp.int32)
     pos = jnp.cumsum(onehot, axis=0) - 1               # (n_tok*k, e+1)
     pos = jnp.take_along_axis(pos, eflat.reshape(-1, 1), axis=1)[:, 0]
     fits = (pos < capacity) & ok.reshape(-1)
     slot = jnp.where(fits, eflat.reshape(-1) * capacity + pos,
-                     e_local * capacity)
+                     e_block * capacity)
     # token id owning each (expert, cap) slot
     tok_ids = jnp.tile(jnp.arange(n_tok)[:, None],
                        (1, mc.top_k)).reshape(-1)
-    owner = jnp.zeros(e_local * capacity + 1, jnp.int32).at[slot].set(
+    owner = jnp.zeros(e_block * capacity + 1, jnp.int32).at[slot].set(
         tok_ids, mode="drop")[:-1]
-    filled = jnp.zeros(e_local * capacity + 1, jnp.bool_).at[slot].set(
+    filled = jnp.zeros(e_block * capacity + 1, jnp.bool_).at[slot].set(
         True, mode="drop")[:-1]
-    gate_of_slot = jnp.zeros(e_local * capacity + 1, jnp.float32).at[
+    gate_of_slot = jnp.zeros(e_block * capacity + 1, jnp.float32).at[
         slot].set(gates.reshape(-1), mode="drop")[:-1]
 
     xe = jnp.take(hf, owner, axis=0)                   # (e*cap, d/x)
     xe = jnp.where(filled[:, None], xe, 0)
-    xe = xe.reshape(e_local, capacity, dx)
 
     # ---- expert FFN (4D tp inside each expert) -------------------------
-    u = PP.tp_batched_matmul(xe, p["w_up"], axes, "x", None)
-    if gated:
-        g, u2 = jnp.split(u, 2, axis=-1)
-        hidden = _act(cfg.act, g) * u2
+    def ffn(block):
+        """block (e_local, C, d/x) -> (e_local, C, d/x); gates stay at
+        the source rank, applied after the combine exchange."""
+        u = PP.tp_batched_matmul(block, p["w_up"], axes, "x", None)
+        if gated:
+            g, u2 = jnp.split(u, 2, axis=-1)
+            hidden = _act(cfg.act, g) * u2
+        else:
+            hidden = _act(cfg.act, u)
+        return PP.tp_batched_matmul(hidden, p["w_down"], axes, None, "x")
+
+    if p_ex > 1:
+        # dispatch buffer, dim 0 = destination expert-rank (the queue
+        # index eflat = t*e_local + local_e already orders it that way)
+        buf = xe.reshape(p_ex, e_local, capacity, dx)
+        if axes.overlap.expert_a2a:
+            out_b = CMM.ring_a2a_expert(buf, axes.expert, ffn)
+        else:
+            recv = M.all_to_all(buf.reshape(p_ex * e_local, capacity, dx),
+                                axes.expert, dim=0)
+            recv = recv.reshape(p_ex, e_local, capacity, dx).transpose(
+                1, 0, 2, 3).reshape(e_local, p_ex * capacity, dx)
+            y = ffn(recv)
+            y = y.reshape(e_local, p_ex, capacity, dx).transpose(
+                1, 0, 2, 3).reshape(p_ex * e_local, capacity, dx)
+            out_b = M.all_to_all(y, axes.expert, dim=0)
+        out_e = out_b.reshape(e_block * capacity, dx)
     else:
-        hidden = _act(cfg.act, u)
-    out_e = PP.tp_batched_matmul(hidden, p["w_down"], axes, None, "x")
-    out_e = out_e.reshape(e_local * capacity, dx)
+        out_e = ffn(xe.reshape(e_block, capacity, dx))
+        out_e = out_e.reshape(e_block * capacity, dx)
     out_e = out_e * gate_of_slot[:, None].astype(out_e.dtype)
 
     # ---- combine: scatter-add back to tokens, all-reduce over y --------

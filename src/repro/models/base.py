@@ -293,8 +293,14 @@ class ArchConfig:
                 mult = 2 if self.gated_mlp else 1
                 # per-token activated expert width (+ shared)
                 fa = mc.top_k * mc.d_expert + mc.n_shared * mc.d_expert
-                out.append(LayerShape(d, mult * fa))
-                out.append(LayerShape(fa, d, transposed=True))
+                # expert=True: the routed bank shards over g_expert (no
+                # expert-axis grad allreduce); a2a_width on the up-proj
+                # prices the dispatch+combine all-to-all once per MoE
+                # block (capacity slots x d elements per token)
+                out.append(LayerShape(
+                    d, mult * fa, expert=True,
+                    a2a_width=mc.capacity_factor * mc.top_k * d))
+                out.append(LayerShape(fa, d, transposed=True, expert=True))
         return tuple(out)
 
     def tp_constraints(self, global_batch: int) -> Constraints:
@@ -334,6 +340,13 @@ class ArchConfig:
                         f"{self.arch_type} (contiguous-prefix inputs)")
             if self.max_seq % axes.gseq:
                 return f"max_seq {self.max_seq} % g_seq {axes.gseq}"
+        if axes.gexpert > 1:
+            if self.moe is None:
+                return (f"expert axis (g_expert={axes.gexpert}) needs an "
+                        f"MoE architecture")
+            if self.moe.n_experts % (axes.gy * axes.gexpert):
+                return (f"experts {self.moe.n_experts} % gy*g_expert "
+                        f"{axes.gy * axes.gexpert}")
         return None
 
     def validate_axes(self, axes) -> None:

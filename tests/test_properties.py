@@ -1,4 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The back half is the comm-model degeneracy suite: every extension of
+the model (5th/6th mesh factor, α-β-γ time, bucketed/ZeRO gradient
+sync, overlap claim order) must reduce EXACTLY to the model it grew out
+of at its identity point — randomized over shapes and decompositions so
+the guarantees in comm_model.py's docstring are properties, not three
+hand-picked examples.
+"""
+import dataclasses
 import math
 
 import jax
@@ -11,9 +20,14 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import comm_model as CM
+from repro.core.gradsync import GradSyncConfig
+from repro.core.overlap import OverlapConfig
 from repro.data.synthetic import DataConfig, SyntheticText
 
 SETTINGS = dict(max_examples=25, deadline=None)
+
+FACTOR = st.sampled_from([1, 2, 4])
+LAYER_KN = st.sampled_from([16, 64, 256])
 
 
 def _factor_triples(g):
@@ -132,3 +146,125 @@ def test_decomposition_enumeration_is_complete():
     assert len(ds) == len({(d.g_data, d.g_x, d.g_y, d.g_z) for d in ds})
     assert all(d.g == 16 for d in ds)
     assert len(ds) == 35  # C(4+4-1, 3) compositions of 2^4 exponents
+
+
+# ---------------------------------------------------------------------- #
+# comm-model degeneracy suite: each model extension at its identity
+# point reproduces the model it grew from, for random shapes/decomps
+# ---------------------------------------------------------------------- #
+
+def _marked_layers(k, n, kvw, a2aw):
+    """A transformer-ish block with seq AND expert markers set."""
+    return [
+        CM.LayerShape(k, 3 * n, kv_ring_width=float(kvw)),
+        CM.LayerShape(n, k, transposed=True),
+        CM.LayerShape(k, 2 * n, expert=True, a2a_width=float(a2aw)),
+        CM.LayerShape(2 * n, k, transposed=True, expert=True),
+    ]
+
+
+def _strip(layers, *, seq=False, expert=False):
+    out = []
+    for ls in layers:
+        if seq:
+            ls = dataclasses.replace(ls, kv_ring_width=0.0)
+        if expert:
+            ls = dataclasses.replace(ls, expert=False, a2a_width=0.0)
+        out.append(ls)
+    return out
+
+
+@given(LAYER_KN, LAYER_KN, st.sampled_from([8, 32]), FACTOR, FACTOR,
+       FACTOR, FACTOR)
+@settings(**SETTINGS)
+def test_seq_identity_degenerates_to_4tuple(k, n, kvw, gd, gx, gy, gz):
+    """g_seq = 1: the KV-ring markers and the seq factor are inert —
+    the 5-tuple model IS the 4-tuple model, bitwise."""
+    layers = _marked_layers(k, n, kvw, 0)
+    stripped = _strip(layers, seq=True)
+    d = CM.Decomposition(gd, gx, gy, gz)            # g_seq defaults to 1
+    assert (CM.model_volume(layers, 4096, d)
+            == CM.model_volume(stripped, 4096, d))
+    for ov in (None, OverlapConfig(ring_attention=True)):
+        assert (CM.predict_step_time(layers, 4096, d, overlap=ov)
+                == CM.predict_step_time(stripped, 4096, d, overlap=ov))
+
+
+@given(LAYER_KN, LAYER_KN, st.sampled_from([8, 32]), FACTOR, FACTOR,
+       FACTOR, st.sampled_from([1, 2]))
+@settings(**SETTINGS)
+def test_expert_identity_degenerates_to_5tuple(k, n, a2aw, gd, gx, gy,
+                                               gseq):
+    """g_expert = 1: the expert-bank/a2a markers and the expert factor
+    are inert — the 6-tuple model IS the 5-tuple model, bitwise."""
+    layers = _marked_layers(k, n, 16, a2aw)
+    stripped = _strip(layers, expert=True)
+    d = CM.Decomposition(gd, gx, gy, 1, gseq)       # g_expert defaults to 1
+    assert (CM.model_volume(layers, 4096, d)
+            == CM.model_volume(stripped, 4096, d))
+    for ov in (None, OverlapConfig(expert_a2a=True)):
+        assert (CM.predict_step_time(layers, 4096, d, overlap=ov)
+                == CM.predict_step_time(stripped, 4096, d, overlap=ov))
+
+
+@given(LAYER_KN, LAYER_KN, FACTOR, FACTOR, FACTOR, FACTOR,
+       st.sampled_from([1, 2]), st.sampled_from([1, 2]))
+@settings(**SETTINGS)
+def test_alpha_gamma_free_time_degenerates_to_volume(k, n, gd, gx, gy,
+                                                     gz, gseq, gex):
+    """α = γ = 0 with no overlap: the exposed-communication term of the
+    time model equals the volume model exactly, for EVERY factor mix —
+    including the seq-ring and expert-a2a classes."""
+    layers = _marked_layers(k, n, 16, 8)
+    d = CM.Decomposition(gd, gx, gy, gz, gseq, gex)
+    hw = CM.HardwareParams(alpha=0.0, gamma=0.0)
+    t = CM.predict_step_time(layers, 4096, d, hw)
+    expect = (CM.model_volume(layers, 4096, d)
+              * hw.bytes_per_elem / hw.link_bw)
+    assert t.hidden_comm == 0.0
+    assert abs(t.exposed_comm - expect) <= 1e-9 * max(expect, 1e-30)
+
+
+@given(st.sampled_from([2, 4, 8]),
+       st.sampled_from([1024.0, 65536.0, 1.5e6]))
+@settings(**SETTINGS)
+def test_zero3_one_microbatch_floor_is_allreduce(p, buf):
+    """The sharded sync schedules bottom out at the blocking volume:
+    one microbatch of ZeRO-3-with-prefetch (AG + RS) — and of
+    bucketed/ZeRO-1 (RS + AG) — moves exactly the all-reduce bytes."""
+    ar = CM.allreduce_volume(p, buf)
+    z3 = GradSyncConfig(zero3=True, prefetch=True)
+    assert CM.dp_sync_volume(p, buf, z3, 1) == ar
+    z1 = GradSyncConfig(bucketed=True)
+    assert CM.dp_sync_volume(p, buf, z1, 1) == ar
+    # and the floor is a floor: more microbatches never move less
+    assert CM.dp_sync_volume(p, buf, z3, 3) >= ar
+    assert CM.dp_sync_volume(p, buf, GradSyncConfig(zero3=True), 1) >= ar
+
+
+@given(FACTOR, FACTOR, FACTOR, st.sampled_from([1, 2]),
+       st.sampled_from([1, 2]), st.booleans())
+@settings(**SETTINGS)
+def test_overlap_claim_order_conserves_comm_time(gx, gy, gz, gseq, gex,
+                                                 zfirst):
+    """The overlap window only MOVES time from exposed to hidden: under
+    any claim order (z_claims_first both ways) and any ring-knob combo,
+    exposed + hidden is the blocking exposed time, and compute is
+    untouched. (cache_weight_gather is excluded — it really drops an
+    AG_z and is modeled as a volume change.)"""
+    layers = _marked_layers(64, 256, 16, 8)
+    d = CM.Decomposition(2, gx, gy, gz, gseq, gex)
+    hw = dataclasses.replace(CM.TPU_V5E, z_claims_first=zfirst)
+    base = CM.predict_step_time(layers, 4096, d, hw)
+    assert base.hidden_comm == 0.0
+    combos = [OverlapConfig(matmul=True),
+              OverlapConfig(all_reduce=True),
+              OverlapConfig(ring_attention=True, expert_a2a=True),
+              OverlapConfig(matmul=True, all_reduce=True,
+                            ring_attention=True, expert_a2a=True)]
+    for ov in combos:
+        t = CM.predict_step_time(layers, 4096, d, hw, overlap=ov)
+        assert t.compute == base.compute
+        total = t.exposed_comm + t.hidden_comm
+        assert abs(total - base.exposed_comm) \
+            <= 1e-9 * max(base.exposed_comm, 1e-30), (ov, d)
